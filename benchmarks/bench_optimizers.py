@@ -1,0 +1,64 @@
+"""Optimizer quality: best-found after a fixed budget on benchmark
+functions (paper cites grid/random/evolutionary/swarm/Bayesian as suitable
+strategies — this table compares them under identical budgets)."""
+import numpy as np
+
+from repro.core.space import Param, Space
+from repro.core.suggest import Observation, make_optimizer
+
+
+def branin(a):
+    x = a["x"] * 15 - 5
+    y = a["y"] * 15
+    v = ((y - 5.1 / (4 * np.pi ** 2) * x ** 2 + 5 / np.pi * x - 6) ** 2
+         + 10 * (1 - 1 / (8 * np.pi)) * np.cos(x) + 10)
+    return -v      # maximize
+
+
+def lr_valley(a):
+    return -((np.log10(a["lr"]) + 2.7) ** 2 + 3 * (a["m"] - 0.9) ** 2)
+
+
+FUNCS = {
+    "branin": (branin, Space([Param("x", "double", 0, 1),
+                              Param("y", "double", 0, 1)])),
+    "lr_valley": (lr_valley, Space([Param("lr", "double", 1e-5, 1e-1,
+                                          log=True),
+                                    Param("m", "double", 0.0, 0.99)])),
+}
+NAMES = ["random", "grid", "sobol", "evolution", "pso", "gp"]
+
+
+def run(budget=40, batch=4, seeds=(0, 1, 2)):
+    rows = []
+    for fname, (f, space) in FUNCS.items():
+        for name in NAMES:
+            bests = []
+            for seed in seeds:
+                opt = make_optimizer(name, space, seed=seed)
+                for _ in range(budget // batch):
+                    asks = opt.ask(batch)
+                    obs = []
+                    for a in asks:
+                        clean = {k: v for k, v in a.items()
+                                 if not k.startswith("__")}
+                        obs.append(Observation(
+                            clean, f(clean),
+                            metadata={k: v for k, v in a.items()
+                                      if k.startswith("__")}))
+                    opt.tell(obs)
+                bests.append(opt.best().value)
+            rows.append((fname, name, float(np.mean(bests)),
+                         float(np.std(bests))))
+    return rows
+
+
+def main():
+    print("# optimizer quality, best after 40 evals (mean over 3 seeds)")
+    print("function/optimizer,us_per_call,best_mean,best_std")
+    for fname, name, mean, std in run():
+        print(f"bench_optimizers/{fname}/{name},0,{mean:.4f},{std:.4f}")
+
+
+if __name__ == "__main__":
+    main()

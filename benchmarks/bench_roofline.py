@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json)."""
+import json
+import pathlib
+
+
+def rows(mesh="16x16", root="results/dryrun"):
+    out = []
+    for p in sorted(pathlib.Path(root).glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("skipped"):
+            out.append((r["arch"], r["shape"], "SKIP", {}))
+        elif r.get("ok"):
+            out.append((r["arch"], r["shape"], r["roofline"]["dominant"],
+                        r["roofline"]))
+        else:
+            out.append((r["arch"], r["shape"], "FAIL", {}))
+    return out
+
+
+def main():
+    import pathlib
+    has_final = pathlib.Path("results/dryrun_final").exists()
+    final = {(a, s): rl for a, s, _, rl in rows(root="results/dryrun_final")}         if has_final else {}
+    print("# roofline terms per (arch x shape), single-pod 16x16 "
+          "(baseline; frac_opt = beyond-paper optimized build)")
+    print("cell,us_per_call,derived")
+    for arch, shape, dom, rl in rows():
+        if not rl:
+            print(f"bench_roofline/{arch}/{shape},0,{dom}")
+            continue
+        bound_us = rl["bound_s"] * 1e6
+        opt = final.get((arch, shape)) or {}
+        print(f"bench_roofline/{arch}/{shape},{bound_us:.0f},"
+              f"dom={dom} frac={rl.get('roofline_fraction', 0):.4f} "
+              f"frac_opt={opt.get('roofline_fraction', 0):.4f} "
+              f"tc={rl['t_compute_s']:.3f} tm={rl['t_memory_s']:.3f} "
+              f"tx={rl['t_collective_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Scheduler throughput + straggler mitigation effect."""
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import (ExperimentConfig, Orchestrator, Param, Resources,
+                        Space)
+from repro.core.faults import FaultPolicy, wrap_trial
+
+
+def throughput(parallel, budget=40):
+    orch = Orchestrator(tempfile.mkdtemp())
+    cfg = ExperimentConfig(name="thr", budget=budget, parallel=parallel,
+                           optimizer="random",
+                           space=Space([Param("x", "double", 0, 1)]))
+    t0 = time.time()
+    orch.run(cfg, trial_fn=lambda a, ctx: a["x"])
+    dt = time.time() - t0
+    return budget / dt, dt / budget * 1e6
+
+
+def straggler_effect(speculate):
+    orch = Orchestrator(tempfile.mkdtemp())
+
+    def trial(a, ctx):
+        slow = a["x"] > 0.9                    # ~10% stragglers
+        t_end = time.time() + (0.6 if slow else 0.02)
+        while time.time() < t_end:
+            time.sleep(0.01)
+            ctx.report(1, 0.0)                 # cancellable
+        return a["x"]
+
+    cfg = ExperimentConfig(
+        name="strag", budget=24, parallel=6, optimizer="sobol",
+        space=Space([Param("x", "double", 0, 1)]),
+        straggler_factor=3.0 if speculate else 0.0)
+    t0 = time.time()
+    orch.run(cfg, trial_fn=trial)
+    return time.time() - t0
+
+
+def main():
+    print("# scheduler throughput (no-op trials)")
+    print("name,us_per_call,derived")
+    for p in (1, 8, 32):
+        tps, us = throughput(p)
+        print(f"bench_scheduler/throughput/p{p},{us:.0f},{tps:.0f} trials/s")
+    base = straggler_effect(False)
+    spec = straggler_effect(True)
+    print(f"bench_scheduler/straggler/no_speculation,{base * 1e6 / 24:.0f},"
+          f"wall={base:.2f}s")
+    print(f"bench_scheduler/straggler/speculation,{spec * 1e6 / 24:.0f},"
+          f"wall={spec:.2f}s speedup={base / spec:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Suggestion-service latency: us per ask() at growing history sizes — the
+hot path of the scheduler's fill loop."""
+import time
+
+import numpy as np
+
+from repro.core.space import Param, Space
+from repro.core.suggest import Observation, make_optimizer
+
+
+def run(history_sizes=(10, 50, 150), names=("random", "sobol", "evolution",
+                                            "pso", "gp")):
+    space = Space([Param("a", "double", 0, 1),
+                   Param("b", "double", 1e-4, 1, log=True),
+                   Param("c", "int", 1, 64)])
+    rng = np.random.default_rng(0)
+    rows = []
+    for name in names:
+        for h in history_sizes:
+            opt = make_optimizer(name, space, seed=0)
+            obs = [Observation(a, float(rng.normal()))
+                   for a in space.sample(rng, h)]
+            opt.tell(obs)
+            opt.ask(1)                      # warm caches / jit
+            t0 = time.perf_counter()
+            n = 10
+            for _ in range(n):
+                opt.ask(1)
+            us = (time.perf_counter() - t0) / n * 1e6
+            rows.append((name, h, us))
+    return rows
+
+
+def main():
+    print("# ask() latency vs history size")
+    print("optimizer/history,us_per_call")
+    for name, h, us in run():
+        print(f"bench_suggest/{name}/h{h},{us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Benchmark harness: one section per paper claim/figure + the roofline
+readout.  Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §9
+for the experiment index)."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_optimizers, bench_parallel,
+                            bench_population, bench_roofline,
+                            bench_scheduler, bench_suggest_latency)
+    for mod in (bench_parallel, bench_optimizers, bench_suggest_latency,
+                bench_scheduler, bench_population, bench_roofline):
+        print(f"\n===== {mod.__name__} =====")
+        try:
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            print(f"{mod.__name__},FAILED,")
+
+
+if __name__ == "__main__":
+    main()

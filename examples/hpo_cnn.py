@@ -1,0 +1,54 @@
+"""The paper's §4 alpha-test use case: tune a 3-conv + 2-fc CNN classifier,
+many evaluations with a fixed parallel bandwidth.
+
+Paper numbers: 300 evaluations, 15 simultaneous, 1 GPU per model.  Default
+here is scaled to CPU (30 evals, 5 parallel); pass --paper for the full 300/15.
+
+  PYTHONPATH=src python examples/hpo_cnn.py [--paper] [--evals N] [--parallel K]
+"""
+import argparse
+import tempfile
+
+from repro.core import (ExperimentConfig, Orchestrator, Param, Resources,
+                        Space)
+from repro.core.monitor import format_experiment_status
+from repro.models.cnn import train_cnn
+
+
+def trial(a, ctx):
+    acc = train_cnn(a, steps=int(a.get("__steps__", 40)),
+                    report=lambda s, v: ctx.report(s, v))
+    ctx.log(f"accuracy={acc:.4f}")
+    return acc
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="full paper scale: 300 evals, 15 parallel")
+    ap.add_argument("--evals", type=int, default=30)
+    ap.add_argument("--parallel", type=int, default=5)
+    args = ap.parse_args(argv)
+    budget = 300 if args.paper else args.evals
+    parallel = 15 if args.paper else args.parallel
+
+    orch = Orchestrator(tempfile.mkdtemp(prefix="orchestrate-"))
+    orch.cluster_create({
+        "cluster_name": "cnn-cluster",
+        "pools": [{"name": "gpu", "resource": "tpu", "chips": parallel}]})
+    cfg = ExperimentConfig(
+        name="traffic-sign-cnn", budget=budget, parallel=parallel,
+        optimizer="gp", goal="max",
+        space=Space([
+            Param("lr", "double", 1e-4, 3e-1, log=True),
+            Param("momentum", "double", 0.0, 0.99),
+            Param("fc_width", "int", 32, 256),
+        ]),
+        resources=Resources(pool="gpu", chips=1),
+        early_stop={"min_steps": 9, "eta": 3})
+    exp = orch.run(cfg, trial_fn=trial, cluster="cnn-cluster")
+    print(format_experiment_status(exp, orch.status(exp)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Quickstart: tune two hyperparameters with GP Bayesian optimization on a
+local cluster, using the full Orchestrate workflow (cluster create -> run ->
+status -> logs -> destroy).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import math
+import tempfile
+
+from repro.core import (ExperimentConfig, Orchestrator, Param, Resources,
+                        Space)
+from repro.core.monitor import format_experiment_status
+
+
+def objective(a, ctx):
+    """A noisy 2D function with optimum near lr=3e-3, dropout=0.2."""
+    import random
+    v = (-(math.log10(a["lr"]) + 2.5) ** 2
+         - 4 * (a["dropout"] - 0.2) ** 2
+         + random.Random(str(a)).gauss(0, 0.01))
+    ctx.log(f"f(lr={a['lr']:.2e}, dropout={a['dropout']:.2f}) = {v:.4f}")
+    return v
+
+
+def main():
+    orch = Orchestrator(tempfile.mkdtemp(prefix="orchestrate-"))
+    orch.cluster_create({
+        "cluster_name": "quickstart",
+        "pools": [{"name": "cpu", "resource": "cpu", "chips": 8}]})
+
+    cfg = ExperimentConfig(
+        name="quickstart-gp", budget=24, parallel=4, optimizer="gp",
+        space=Space([Param("lr", "double", 1e-5, 1e-1, log=True),
+                     Param("dropout", "double", 0.0, 0.6)]),
+        resources=Resources(pool="cpu", chips=1))
+    exp = orch.run(cfg, trial_fn=objective, cluster="quickstart")
+
+    print(format_experiment_status(exp, orch.status(exp)))
+    print("\nlast log lines:")
+    for line in list(orch.logs(exp))[-4:]:
+        print(" ", line)
+    orch.cluster_destroy("quickstart")
+    print("\ncluster destroyed; experiment record kept in the store.")
+
+
+if __name__ == "__main__":
+    main()

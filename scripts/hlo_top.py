@@ -1,0 +1,46 @@
+"""Rank instructions by charged cost (bytes or ici) with trip multipliers."""
+import gzip, re, sys, collections
+sys.path.insert(0, "src")
+from repro.distributed import hlo as H
+
+path, mode = sys.argv[1], sys.argv[2]  # bytes | ici
+with gzip.open(path, "rt") as f:
+    text = f.read()
+an = H.HloAnalyzer(text, 256)
+comps = an.comps
+
+# compute trip multiplier per computation by walking from entry
+mult = collections.defaultdict(float)
+def walk(name, m):
+    comp = comps.get(name)
+    if comp is None: return
+    mult[name] += m
+    for ins in comp.instrs:
+        if ins.opcode == "while":
+            mm = H._COND_BODY_RE.search(ins.line)
+            if mm:
+                trips = H._trip_count(comps.get(mm.group(1), H._Comp("")))
+                walk(mm.group(2), m * trips)
+walk(an.entry, 1.0)
+
+rows = []
+for cname, m in mult.items():
+    comp = comps[cname]
+    for ins in comp.instrs:
+        if mode == "bytes":
+            if ins.opcode in ("parameter","constant","tuple","get-tuple-element","bitcast","copy","while"):
+                continue
+            b = an._instr_bytes(ins, comp) * m
+            if b > 0: rows.append((b, cname, ins.opcode, ins.line[:130]))
+        else:
+            kind = ins.opcode.replace("-start","")
+            if kind in ("all-gather","all-reduce","reduce-scatter","all-to-all","collective-permute") and not ins.opcode.endswith("-done"):
+                rb = H._shape_bytes(ins.result_type)
+                grp = H._group_size(ins.line, 256)
+                rows.append((H._ici_bytes(kind, rb, grp) * m, cname, ins.opcode, ins.line[:150]))
+rows.sort(reverse=True)
+total = sum(r[0] for r in rows)
+print(f"total {mode}: {total:.3e}")
+for b, cname, op, line in rows[:15]:
+    opn = re.search(r'op_name="([^"]*)"', line)
+    print(f"{b:.3e} ({100*b/total:4.1f}%) {op:18s} {(opn.group(1) if opn else line)[-110:]}")

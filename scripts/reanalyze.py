@@ -1,0 +1,30 @@
+"""Re-score all dry-run cells from stored gzipped HLO with the current
+analyzer (no recompilation)."""
+import gzip, json, pathlib, sys
+sys.path.insert(0, "src")
+from repro.distributed.hlo import analyze
+from repro.distributed.roofline import roofline_terms
+
+out = pathlib.Path("results/dryrun")
+hlo_dir = pathlib.Path("results/hlo")
+n = 0
+for j in sorted(out.glob("*.json")):
+    rec = json.loads(j.read_text())
+    if rec.get("skipped") or not rec.get("ok"):
+        continue
+    h = hlo_dir / (j.stem + ".txt.gz")
+    if not h.exists():
+        continue
+    with gzip.open(h, "rt") as f:
+        text = f.read()
+    hlo = analyze(text, rec["n_devices"])
+    model_flops = rec["roofline"]["model_flops_per_chip"]
+    terms = roofline_terms(hlo, hlo["ici_bytes"],
+                           model_flops_per_chip=model_flops)
+    rec["collectives"] = {"counts": hlo["collective_counts"],
+                          "ici_bytes": hlo["collective_bytes"],
+                          "total_ici_bytes": hlo["ici_bytes"]}
+    rec["roofline"] = terms
+    j.write_text(json.dumps(rec, indent=1))
+    n += 1
+print(f"re-scored {n} cells")

@@ -1,0 +1,130 @@
+"""Sharded npz checkpoints with async writes and atomic step directories.
+
+Fault-tolerance contract (trial-level of DESIGN.md §7):
+* a checkpoint directory becomes visible only after a complete atomic
+  rename, so a crash mid-write can never produce a half checkpoint;
+* ``latest_step`` scans for the newest complete step — restart just works;
+* writes happen on a background thread (training never blocks on disk);
+* ``keep`` bounds disk usage (old steps garbage-collected).
+
+Pytrees are flattened to name->array with jax.tree_util key paths, stored as
+one npz per host shard (this container: one shard).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(tree, path: pathlib.Path) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(template, path: pathlib.Path):
+    """Restore into the structure of ``template`` (shape/dtype checked)."""
+    data = np.load(path, allow_pickle=False)
+    flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_t, leaf in flat_t:
+        key = "/".join(_path_str(p) for p in path_t)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_write = async_write
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- write
+    def save(self, step: int, state, metadata: Optional[Dict] = None) -> None:
+        self.wait()  # one in-flight write at a time
+        # device->host copy happens NOW so training can mutate state after
+        host_state = jax.tree.map(np.asarray, state)
+
+        def write():
+            tmp = self.dir / f".tmp-{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            save_pytree(host_state, tmp / "state.npz")
+            (tmp / "meta.json").write_text(json.dumps(
+                {"step": step, **(metadata or {})}))
+            final = self.dir / f"step_{step:08d}"
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(tmp, final)            # atomic visibility
+            self._gc()
+
+        if self.async_write:
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # ------------------------------------------------------------- read
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            m = re.fullmatch(r"step_(\d+)", p.name)
+            if m and (p / "state.npz").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        state = load_pytree(template, d / "state.npz")
+        meta = json.loads((d / "meta.json").read_text())
+        return state, meta

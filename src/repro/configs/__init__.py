@@ -1,0 +1,2 @@
+from repro.configs.registry import (cache_specs, concrete_inputs, get_config,
+                                    input_specs, list_archs)

@@ -1,0 +1,97 @@
+"""Architecture registry + per-cell input specs.
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input of a (architecture x input-shape) cell — weak-type-correct,
+shardable, and allocation-free, which is what the multi-pod dry-run lowers
+against.  ``concrete_inputs`` materializes small real batches for smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import SHAPES, ModelConfig, ShapeSpec
+
+_MODULES = {
+    "phi3-medium-14b": "phi3_medium_14b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "granite-3-8b": "granite_3_8b",
+    "granite-8b": "granite_8b",
+    "whisper-medium": "whisper_medium",
+    "llava-next-34b": "llava_next_34b",
+    "xlstm-125m": "xlstm_125m",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+}
+
+
+def list_archs():
+    return list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def _token_specs(batch: int, seq: int) -> Dict[str, Any]:
+    i32 = jnp.int32
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Model inputs for a cell.  train/prefill return a batch dict; decode
+    returns {'tokens': (B,)} — the cache is produced by ``cache_specs``."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.compute_dtype
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), jnp.int32)}
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_img_tokens
+        specs = _token_specs(B, s_text)
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_img_tokens, cfg.d_model), dt)
+    elif cfg.family == "encdec":
+        specs = _token_specs(B, S)
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), dt)
+    else:
+        specs = _token_specs(B, S)
+    if shape.kind == "prefill":
+        specs.pop("labels")
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """ShapeDtypeStruct pytree of the decode cache for a cell."""
+    from repro.models.model import LM
+    B, S = shape.global_batch, shape.seq_len
+    enc = cfg.encoder_seq if cfg.family == "encdec" else 0
+    return jax.eval_shape(
+        lambda: LM(cfg).init_cache(B, S, enc_len=enc))
+
+
+def concrete_inputs(cfg: ModelConfig, shape: ShapeSpec,
+                    seed: int = 0) -> Dict[str, Any]:
+    """Small real batches for smoke tests (reduced configs only)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, s in input_specs(cfg, shape).items():
+        if np.issubdtype(s.dtype, np.integer):
+            out[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, s.shape), s.dtype)
+        else:
+            out[name] = jnp.asarray(rng.normal(0, 1, s.shape), s.dtype)
+    return out
+
+
+__all__ = ["list_archs", "get_config", "input_specs", "cache_specs",
+           "concrete_inputs", "SHAPES"]

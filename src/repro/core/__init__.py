@@ -1,0 +1,15 @@
+# The paper's primary contribution — parallel hyperparameter-optimization
+# infrastructure: spaces + suggestion service + cluster + scheduler +
+# lifecycle + monitoring + population (vmap) execution.
+from repro.core.cluster import Cluster, ClusterConfig, PoolConfig
+from repro.core.experiment import ExperimentConfig, Resources, TrialSpec
+from repro.core.orchestrator import Orchestrator
+from repro.core.scheduler import Scheduler, TrialContext, TrialStopped
+from repro.core.space import Param, Space
+from repro.core.store import Store
+from repro.core.suggest import ASHA, Observation, make_optimizer
+
+__all__ = ["Cluster", "ClusterConfig", "PoolConfig", "ExperimentConfig",
+           "Resources", "TrialSpec", "Orchestrator", "Scheduler",
+           "TrialContext", "TrialStopped", "Param", "Space", "Store",
+           "ASHA", "Observation", "make_optimizer"]

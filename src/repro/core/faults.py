@@ -1,0 +1,88 @@
+"""Fault injection + recovery plumbing.
+
+The scheduler already implements the recovery policies (retry, requeue on
+preemption, speculative re-execution); this module provides deterministic
+fault *injection* so those paths are testable without real node failures —
+the same role chaos testing plays for the paper's Kubernetes deployment.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core.cluster import Cluster
+
+
+class InjectedCrash(RuntimeError):
+    pass
+
+
+@dataclass
+class FaultPolicy:
+    p_crash: float = 0.0         # trial raises before finishing
+    p_nan: float = 0.0           # trial returns NaN (diverged model)
+    p_slow: float = 0.0          # trial becomes a straggler
+    slow_factor: float = 5.0
+    seed: int = 0
+
+
+def wrap_trial(trial_fn: Callable, policy: FaultPolicy) -> Callable:
+    """Deterministic per-trial fault injection keyed by assignment hash."""
+    def wrapped(assignment: Dict[str, Any], ctx):
+        h = abs(hash(tuple(sorted((k, repr(v)) for k, v in
+                                  assignment.items())))) % (2 ** 32)
+        rng = np.random.default_rng(policy.seed ^ h)
+        roll = rng.uniform()
+        if roll < policy.p_crash:
+            ctx.log("fault-injection: crash")
+            raise InjectedCrash("injected crash")
+        if roll < policy.p_crash + policy.p_nan:
+            ctx.log("fault-injection: nan")
+            return float("nan")
+        if roll < policy.p_crash + policy.p_nan + policy.p_slow:
+            ctx.log(f"fault-injection: straggler x{policy.slow_factor}")
+            t0 = time.time()
+            out = trial_fn(assignment, ctx)
+            time.sleep((time.time() - t0) * (policy.slow_factor - 1.0))
+            return out
+        return trial_fn(assignment, ctx)
+    return wrapped
+
+
+class ChaosMonkey:
+    """Background node-killer against a Cluster (cluster-level fault
+    tolerance: revoked leases -> scheduler requeues from checkpoints)."""
+
+    def __init__(self, cluster: Cluster, pool: str, period_s: float,
+                 heal_s: Optional[float] = None, seed: int = 0):
+        self.cluster = cluster
+        self.pool = pool
+        self.period_s = period_s
+        self.heal_s = heal_s
+        self.rng = np.random.default_rng(seed)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.kills = 0
+
+    def start(self):
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)
+
+    def _loop(self):
+        while not self._stop.wait(self.period_s):
+            before = self.cluster.status()["pools"][self.pool]["chips"]
+            revoked = self.cluster.fail_nodes(self.pool, 1)
+            self.kills += 1
+            if self.heal_s is not None:
+                time.sleep(self.heal_s)
+                self.cluster.scale(self.pool, before)   # node replaced

@@ -1,0 +1,142 @@
+"""Experiment/cluster lifecycle — the library behind the six CLI verbs
+(paper §3.1).  Cluster and experiment lifetimes are deliberately
+dissociated (paper §2.6): destroying a cluster never deletes experiment
+records from the store.
+"""
+from __future__ import annotations
+
+import importlib
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+from repro.core.cluster import Cluster, ClusterConfig
+from repro.core.experiment import ExperimentConfig, new_experiment_id
+from repro.core.scheduler import Scheduler, TrialContext
+from repro.core.store import Store
+from repro.core.suggest.base import make_optimizer
+
+
+def resolve_entrypoint(spec: str) -> Callable:
+    """'pkg.module:function' -> callable (the model-agnostic hook that
+    replaces the paper's container entrypoint)."""
+    mod, _, attr = spec.partition(":")
+    fn = getattr(importlib.import_module(mod), attr or "main")
+    return fn
+
+
+class Orchestrator:
+    def __init__(self, store_root: str = ".orchestrate"):
+        self.store = Store(store_root)
+        self._clusters: Dict[str, Cluster] = {}
+        self._schedulers: Dict[str, Scheduler] = {}
+        self._threads: Dict[str, threading.Thread] = {}
+
+    # ------------------------------------------------------------- clusters
+    def cluster_create(self, config: Dict[str, Any]) -> Cluster:
+        cc = ClusterConfig.from_json(config)
+        if self.store.load_cluster(cc.cluster_name) is not None:
+            raise ValueError(f"cluster {cc.cluster_name!r} already exists")
+        cluster = Cluster(cc)
+        self._clusters[cc.cluster_name] = cluster
+        self.store.save_cluster(cc.cluster_name, cc.to_json())
+        return cluster
+
+    def cluster_get(self, name: str) -> Cluster:
+        if name in self._clusters:
+            return self._clusters[name]
+        state = self.store.load_cluster(name)
+        if state is None:
+            raise KeyError(f"no cluster {name!r}")
+        cluster = Cluster(ClusterConfig.from_json(state))
+        self._clusters[name] = cluster
+        return cluster
+
+    def cluster_destroy(self, name: str) -> bool:
+        """Tear down the cluster; experiment records remain in the store."""
+        for exp_id, sched in list(self._schedulers.items()):
+            sched.stop()
+        self._clusters.pop(name, None)
+        return self.store.delete_cluster(name)
+
+    def cluster_status(self, name: str) -> Dict[str, Any]:
+        return self.cluster_get(name).status()
+
+    # ----------------------------------------------------------- experiments
+    def run(self, cfg: ExperimentConfig,
+            trial_fn: Optional[Callable[[Dict[str, Any], TrialContext],
+                                        float]] = None,
+            cluster: Optional[str] = None, background: bool = False,
+            exp_id: Optional[str] = None) -> str:
+        """Start (or resume) an experiment.  Resuming an existing exp_id
+        replays the observation log into the optimizer — experiment-level
+        checkpoint/restart."""
+        resume = exp_id is not None and (
+            self.store.exp_dir(exp_id) / "config.json").exists()
+        if exp_id is None:
+            exp_id = new_experiment_id()
+        if not resume:
+            self.store.create_experiment(exp_id, cfg)
+        if trial_fn is None:
+            if not cfg.entrypoint:
+                raise ValueError("need trial_fn or cfg.entrypoint")
+            trial_fn = resolve_entrypoint(cfg.entrypoint)
+
+        optimizer = make_optimizer(cfg.optimizer, cfg.space, seed=cfg.seed,
+                                   **cfg.optimizer_options)
+        if resume:
+            prior = self.store.load_observations(exp_id)
+            if prior:
+                optimizer.tell(prior)
+        clu = self.cluster_get(cluster) if cluster else None
+        sched = Scheduler(exp_id, cfg, optimizer, clu, self.store, trial_fn)
+        if resume:
+            sched._observations = len(self.store.load_observations(exp_id))
+        self._schedulers[exp_id] = sched
+        if background:
+            th = threading.Thread(target=sched.run, daemon=True,
+                                  name=f"sched-{exp_id}")
+            th.start()
+            self._threads[exp_id] = th
+        else:
+            sched.run()
+        return exp_id
+
+    def wait(self, exp_id: str, timeout: Optional[float] = None) -> None:
+        th = self._threads.get(exp_id)
+        if th:
+            th.join(timeout)
+
+    def status(self, exp_id: str) -> Dict[str, Any]:
+        st = self.store.get_status(exp_id)
+        try:
+            cfg = self.store.load_config(exp_id)
+            st["name"] = cfg.name
+            st["budget"] = cfg.budget
+        except FileNotFoundError:
+            pass
+        sched = self._schedulers.get(exp_id)
+        if sched:
+            st["running_trials"] = sched._in_flight()
+        obs = self.store.load_observations(exp_id)
+        st["observations"] = len(obs)
+        st["failures"] = sum(1 for o in obs if o.failed)
+        ok = [o for o in obs if not o.failed and o.value is not None]
+        if ok:
+            st["best"] = max(ok, key=lambda o: o.value).to_json()
+        return st
+
+    def logs(self, exp_id: str, follow: bool = False) -> Iterator[str]:
+        stop = None
+        sched = self._schedulers.get(exp_id)
+        if sched is not None:
+            stop = lambda: (sched._stop.is_set()
+                            or sched._observations >= sched.cfg.budget)
+        return self.store.iter_logs(exp_id, follow=follow, stop=stop)
+
+    def delete(self, exp_id: str) -> None:
+        """Terminate all execution and free resources (paper §2.5)."""
+        sched = self._schedulers.get(exp_id)
+        if sched:
+            sched.stop()
+        self.store.update_status(exp_id, state="deleted")

@@ -1,0 +1,327 @@
+"""Parallel trial scheduler — the Kubernetes-job-controller analogue.
+
+Responsibilities (paper mapping):
+* keep ``parallel`` trials in flight against the suggestion service (§2.1:
+  "evaluating multiple model configurations simultaneously");
+* admission control against the cluster allocator (§3.5.1: Kubernetes
+  "manages resource and capacity limitations" -> our allocator does);
+* failed observations are first-class results, with bounded retries
+  (§2.5: "code throwing exceptions ... report failure");
+* ASHA early stopping via ``ctx.report`` (§2.5 stopping experiments);
+* straggler mitigation: speculative duplicate of the slowest running trial
+  when it exceeds ``straggler_factor x`` the median completed runtime and a
+  slot is free — first finisher wins (beyond-paper, required at 1000-node
+  scale);
+* preemption/revocation: a revoked lease requeues the trial; trials resume
+  from their checkpoint directory if they wrote one.
+
+Trials run on a thread pool: jax releases the GIL during compute, and on
+real TPU slices each trial drives its own device set.  The scheduler is the
+single writer of the experiment store.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+import uuid
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.cluster import Cluster, SliceLease
+from repro.core.experiment import ExperimentConfig, TrialSpec
+from repro.core.store import Store
+from repro.core.suggest import ASHA, Observation
+from repro.core.suggest.base import Optimizer
+
+
+class TrialStopped(Exception):
+    """Raised inside a trial when ASHA (or delete) says stop.  Carries the
+    last reported (step, value) so the pruned trial still yields a (partial)
+    observation — ASHA rung values are informative, not failures."""
+
+    def __init__(self, trial_id, step=None, value=None):
+        super().__init__(trial_id)
+        self.step, self.value = step, value
+
+
+class TrialPreempted(Exception):
+    """Raised when the trial's slice was revoked mid-run."""
+
+
+@dataclass
+class TrialContext:
+    """Handed to the user's trial function (the 'container environment')."""
+    trial_id: str
+    experiment_id: str
+    lease: Optional[SliceLease]
+    checkpoint_dir: str
+    _log: Callable[[str], None]
+    _report: Callable[[int, float], str]
+    _should_stop: Callable[[], bool]
+
+    def log(self, msg: str) -> None:
+        self._log(msg)
+
+    def report(self, step: int, value: float) -> None:
+        """Progress report; raises to stop the trial (ASHA / delete /
+        speculative loser / preemption)."""
+        if self.lease is not None and self.lease.revoked:
+            raise TrialPreempted(self.trial_id)
+        if self._should_stop():
+            raise TrialStopped(self.trial_id, step, value)
+        if self._report(step, value) == "stop":
+            raise TrialStopped(self.trial_id, step, value)
+
+
+@dataclass
+class _Running:
+    spec: TrialSpec
+    future: Future
+    lease: Optional[SliceLease]
+    started: float
+    stop_flag: threading.Event
+    speculative_of: Optional[str] = None
+
+
+class Scheduler:
+    def __init__(self, exp_id: str, cfg: ExperimentConfig,
+                 optimizer: Optimizer, cluster: Optional[Cluster],
+                 store: Store, trial_fn: Callable[[Dict[str, Any],
+                                                   TrialContext], float]):
+        self.exp_id = exp_id
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.cluster = cluster
+        self.store = store
+        self.trial_fn = trial_fn
+        self.asha = ASHA(goal=cfg.goal, **cfg.early_stop) \
+            if cfg.early_stop else None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._running: Dict[str, _Running] = {}
+        self._requeue: List[TrialSpec] = []
+        self._done_values: List[float] = []     # runtimes of completions
+        self._observations = 0
+        self._failures = 0
+        self._trial_seq = 0
+
+    # ----------------------------------------------------------------- api
+    def stop(self) -> None:
+        """Terminate all executions (paper §2.5 / `delete` verb)."""
+        self._stop.set()
+        for r in list(self._running.values()):
+            r.stop_flag.set()
+
+    def run(self) -> Dict[str, Any]:
+        self.store.update_status(self.exp_id, state="running",
+                                 budget=self.cfg.budget)
+        pool = ThreadPoolExecutor(max_workers=self.cfg.parallel + 2,
+                                  thread_name_prefix=f"trial-{self.exp_id}")
+        try:
+            while (self._observations < self.cfg.budget
+                   and not self._stop.is_set()):
+                self._fill_slots(pool)
+                self._maybe_speculate(pool)
+                self._harvest()
+                time.sleep(0.005)
+        finally:
+            self.stop()
+            # drain
+            futures = [r.future for r in self._running.values()]
+            if futures:
+                wait(futures, timeout=30)
+            self._harvest(final=True)
+            pool.shutdown(wait=False, cancel_futures=True)
+        best = self.optimizer.best()
+        status = self.store.update_status(
+            self.exp_id,
+            state="complete" if not self._stop.is_set() or
+            self._observations >= self.cfg.budget else "stopped",
+            observations=self._observations, failures=self._failures,
+            best=(best.to_json() if best else None))
+        return status
+
+    # ------------------------------------------------------------ internals
+    def _next_specs(self, n: int) -> List[TrialSpec]:
+        specs = []
+        while self._requeue and len(specs) < n:
+            specs.append(self._requeue.pop(0))
+        if len(specs) < n:
+            for a in self.optimizer.ask(n - len(specs)):
+                self._trial_seq += 1
+                specs.append(TrialSpec(f"t{self._trial_seq:04d}", a))
+        return specs
+
+    def _in_flight(self) -> int:
+        return len(self._running)
+
+    def _pending_budget(self) -> int:
+        return self.cfg.budget - self._observations - sum(
+            1 for r in self._running.values() if not r.speculative_of)
+
+    def _fill_slots(self, pool: ThreadPoolExecutor) -> None:
+        free = self.cfg.parallel - self._in_flight()
+        want = min(free, max(0, self._pending_budget()))
+        if want <= 0:
+            return
+        for spec in self._next_specs(want):
+            self._launch(pool, spec)
+
+    def _launch(self, pool: ThreadPoolExecutor, spec: TrialSpec,
+                speculative_of: Optional[str] = None) -> bool:
+        lease = None
+        if self.cluster is not None:
+            lease = self.cluster.allocate(
+                self.cfg.resources.pool, self.cfg.resources.chips,
+                on_revoke=lambda l, tid=spec.trial_id: self._on_revoke(tid))
+            if lease is None:       # admission control: no capacity
+                self._requeue.insert(0, spec)
+                return False
+        stop_flag = threading.Event()
+        run_id = spec.trial_id + (f"-spec{spec.attempt}" if speculative_of
+                                  else (f"-r{spec.attempt}" if spec.attempt
+                                        else ""))
+        ctx = TrialContext(
+            trial_id=run_id, experiment_id=self.exp_id, lease=lease,
+            checkpoint_dir=str(self.store.exp_dir(self.exp_id)
+                               / "ckpt" / spec.trial_id),
+            _log=lambda m, rid=run_id: self.store.append_log(
+                self.exp_id, rid, m),
+            _report=(lambda step, v, tid=spec.trial_id:
+                     self.asha.report(tid, step, v) if self.asha
+                     else "continue"),
+            _should_stop=stop_flag.is_set)
+        fut = pool.submit(self._run_trial, spec, ctx)
+        self._running[run_id] = _Running(spec, fut, lease, time.time(),
+                                         stop_flag, speculative_of)
+        return True
+
+    def _run_trial(self, spec: TrialSpec, ctx: TrialContext):
+        ctx.log(f"start attempt={spec.attempt} "
+                f"assignment={ {k: v for k, v in spec.assignment.items() if not k.startswith('__')} }")
+        clean = {k: v for k, v in spec.assignment.items()
+                 if not k.startswith("__")}
+        value = self.trial_fn(clean, ctx)
+        ctx.log(f"done value={value}")
+        return value
+
+    def _on_revoke(self, trial_id: str) -> None:
+        # lease revoked (node failure): flag the trial; harvest requeues it
+        for rid, r in self._running.items():
+            if r.spec.trial_id == trial_id:
+                r.stop_flag.set()
+
+    def _median_runtime(self) -> Optional[float]:
+        if len(self._done_values) < 3:
+            return None
+        s = sorted(self._done_values)
+        return s[len(s) // 2]
+
+    def _maybe_speculate(self, pool: ThreadPoolExecutor) -> None:
+        if not self.cfg.straggler_factor or self._stop.is_set():
+            return
+        med = self._median_runtime()
+        if med is None or self._in_flight() >= self.cfg.parallel:
+            return
+        now = time.time()
+        for rid, r in list(self._running.items()):
+            if r.speculative_of or r.spec.speculative:
+                continue
+            already = any(rr.speculative_of == r.spec.trial_id
+                          for rr in self._running.values())
+            if already:
+                continue
+            if now - r.started > self.cfg.straggler_factor * med:
+                dup = TrialSpec(r.spec.trial_id, r.spec.assignment,
+                                attempt=r.spec.attempt + 1, speculative=True)
+                if self._launch(pool, dup, speculative_of=r.spec.trial_id):
+                    self.store.append_log(
+                        self.exp_id, rid,
+                        f"straggler: speculative duplicate launched "
+                        f"(elapsed {now - r.started:.1f}s > "
+                        f"{self.cfg.straggler_factor:.1f} x median {med:.1f}s)")
+
+    def _harvest(self, final: bool = False) -> None:
+        done = [(rid, r) for rid, r in self._running.items()
+                if r.future.done()]
+        for rid, r in done:
+            del self._running[rid]
+            if r.lease is not None and self.cluster is not None:
+                self.cluster.release(r.lease)
+            stopped_at = None
+            try:
+                value = r.future.result()
+                err = None
+            except (TrialStopped,) as e:
+                value, err = e.value, ("stopped", str(e))
+                stopped_at = e.step
+            except TrialPreempted as e:
+                value, err = None, ("preempted", str(e))
+            except Exception as e:  # noqa: trial crash is data, not a bug
+                value, err = None, ("crashed",
+                                    f"{type(e).__name__}: {e}")
+                self.store.append_log(self.exp_id, rid,
+                                      "TRACEBACK\n" + traceback.format_exc())
+
+            origin = r.speculative_of or r.spec.trial_id
+            winner_done = any(o.metadata.get("trial_id") == origin
+                              for o in self.optimizer.history
+                              if o.metadata)
+            if winner_done:
+                continue    # a speculative twin already reported
+
+            if err is None:
+                # cancel the twin, if any
+                for rr in self._running.values():
+                    if (rr.speculative_of == origin
+                            or rr.spec.trial_id == origin):
+                        rr.stop_flag.set()
+                runtime = time.time() - r.started
+                self._done_values.append(runtime)
+                goal_v = value if self.cfg.goal == "max" else -value
+                obs = Observation(
+                    r.spec.assignment, goal_v,
+                    metadata={"trial_id": origin, "runtime_s": runtime,
+                              "attempt": r.spec.attempt,
+                              **{k: v for k, v in r.spec.assignment.items()
+                                 if k.startswith("__")}})
+                self.optimizer.tell([obs])
+                self.store.append_observation(self.exp_id, obs, origin)
+                self._observations += 1
+            elif err[0] == "stopped" and value is not None:
+                # early-stopped: record the last rung value as a pruned
+                # (partial) observation — informative, not a failure
+                goal_v = value if self.cfg.goal == "max" else -value
+                obs = Observation(r.spec.assignment, goal_v,
+                                  metadata={"trial_id": origin,
+                                            "pruned": True,
+                                            "pruned_at_step": stopped_at})
+                self.optimizer.tell([obs])
+                self.store.append_observation(self.exp_id, obs, origin)
+                self._observations += 1
+            elif err[0] == "stopped":
+                # stopped before any report (delete/shutdown): drop silently
+                pass
+            elif err[0] == "preempted" or (err[0] == "crashed"
+                                           and r.spec.attempt
+                                           < self.cfg.max_retries):
+                if not final and not self._stop.is_set():
+                    self._requeue.append(TrialSpec(
+                        r.spec.trial_id, r.spec.assignment,
+                        attempt=r.spec.attempt + 1))
+                    self.store.append_log(self.exp_id, rid,
+                                          f"requeued after {err[0]}")
+            else:
+                obs = Observation(r.spec.assignment, None, failed=True,
+                                  metadata={"trial_id": origin,
+                                            "reason": err[1]})
+                self.optimizer.tell([obs])
+                self.store.append_observation(self.exp_id, obs, origin)
+                self._observations += 1
+                self._failures += 1
+            self.store.update_status(
+                self.exp_id, observations=self._observations,
+                failures=self._failures, running=self._in_flight())

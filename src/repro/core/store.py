@@ -1,0 +1,138 @@
+"""System-of-record persistence (the paper's SigOpt role, §3.5): experiment
+metadata, parameters, and performance live here *in perpetuity* — destroying
+a cluster never touches the store (paper §2.6 dissociates the lifecycles).
+
+Layout (JSON/JSONL; append-only observation log is crash-safe):
+  <root>/experiments/<id>/config.json
+  <root>/experiments/<id>/status.json
+  <root>/experiments/<id>/observations.jsonl
+  <root>/experiments/<id>/logs/<trial>.log
+  <root>/clusters/<name>.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+from repro.core.experiment import ExperimentConfig
+from repro.core.suggest.base import Observation
+
+DEFAULT_ROOT = ".orchestrate"
+
+
+class Store:
+    def __init__(self, root: str = DEFAULT_ROOT):
+        self.root = pathlib.Path(root)
+        (self.root / "experiments").mkdir(parents=True, exist_ok=True)
+        (self.root / "clusters").mkdir(parents=True, exist_ok=True)
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- experiments
+    def exp_dir(self, exp_id: str) -> pathlib.Path:
+        return self.root / "experiments" / exp_id
+
+    def create_experiment(self, exp_id: str, cfg: ExperimentConfig) -> None:
+        d = self.exp_dir(exp_id)
+        (d / "logs").mkdir(parents=True, exist_ok=True)
+        (d / "config.json").write_text(json.dumps(cfg.to_json(), indent=1))
+        self.set_status(exp_id, {"state": "pending", "created": time.time()})
+
+    def load_config(self, exp_id: str) -> ExperimentConfig:
+        return ExperimentConfig.from_json(
+            json.loads((self.exp_dir(exp_id) / "config.json").read_text()))
+
+    def set_status(self, exp_id: str, status: Dict[str, Any]) -> None:
+        p = self.exp_dir(exp_id) / "status.json"
+        tmp = p.with_suffix(".tmp")
+        with self._lock:
+            tmp.write_text(json.dumps(status, indent=1))
+            os.replace(tmp, p)  # atomic
+
+    def get_status(self, exp_id: str) -> Dict[str, Any]:
+        p = self.exp_dir(exp_id) / "status.json"
+        return json.loads(p.read_text()) if p.exists() else {}
+
+    def update_status(self, exp_id: str, **fields) -> Dict[str, Any]:
+        st = self.get_status(exp_id)
+        st.update(fields)
+        self.set_status(exp_id, st)
+        return st
+
+    def list_experiments(self) -> List[str]:
+        return sorted(p.name for p in (self.root / "experiments").iterdir()
+                      if p.is_dir())
+
+    # ----------------------------------------------------------- observations
+    def append_observation(self, exp_id: str, obs: Observation,
+                           trial_id: str = "") -> None:
+        rec = obs.to_json()
+        rec["trial_id"] = trial_id
+        rec["time"] = time.time()
+        with self._lock:
+            with open(self.exp_dir(exp_id) / "observations.jsonl", "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+    def load_observations(self, exp_id: str) -> List[Observation]:
+        p = self.exp_dir(exp_id) / "observations.jsonl"
+        if not p.exists():
+            return []
+        out = []
+        for line in p.read_text().splitlines():
+            if line.strip():
+                out.append(Observation.from_json(json.loads(line)))
+        return out
+
+    # ----------------------------------------------------------------- logs
+    def log_path(self, exp_id: str, trial_id: str) -> pathlib.Path:
+        return self.exp_dir(exp_id) / "logs" / f"{trial_id}.log"
+
+    def append_log(self, exp_id: str, trial_id: str, line: str) -> None:
+        p = self.log_path(exp_id, trial_id)
+        with open(p, "a") as f:
+            f.write(line.rstrip("\n") + "\n")
+
+    def iter_logs(self, exp_id: str, follow: bool = False,
+                  poll: float = 0.2, stop=None) -> Iterator[str]:
+        """Aggregate all trial logs of one experiment, tagged by trial —
+        paper §2.4: 'recover all logs associated with a single experiment,
+        irrespective of how parallel configurations were distributed'."""
+        log_dir = self.exp_dir(exp_id) / "logs"
+        offsets: Dict[str, int] = {}
+        while True:
+            emitted = False
+            for p in sorted(log_dir.glob("*.log")):
+                text = p.read_text()
+                off = offsets.get(p.name, 0)
+                if len(text) > off:
+                    for line in text[off:].splitlines():
+                        yield f"[{p.stem}] {line}"
+                        emitted = True
+                    offsets[p.name] = len(text)
+            if not follow:
+                return
+            if stop is not None and stop() and not emitted:
+                return
+            time.sleep(poll)
+
+    # -------------------------------------------------------------- clusters
+    def save_cluster(self, name: str, state: Dict[str, Any]) -> None:
+        p = self.root / "clusters" / f"{name}.json"
+        p.write_text(json.dumps(state, indent=1))
+
+    def load_cluster(self, name: str) -> Optional[Dict[str, Any]]:
+        p = self.root / "clusters" / f"{name}.json"
+        return json.loads(p.read_text()) if p.exists() else None
+
+    def delete_cluster(self, name: str) -> bool:
+        p = self.root / "clusters" / f"{name}.json"
+        if p.exists():
+            p.unlink()
+            return True
+        return False
+
+    def list_clusters(self) -> List[str]:
+        return sorted(p.stem for p in (self.root / "clusters").glob("*.json"))

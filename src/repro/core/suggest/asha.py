@@ -1,0 +1,34 @@
+"""ASHA-style asynchronous successive halving (paper §2.5: stop bad trials
+early and free their resources).
+
+Usage: trials call ``report(trial_id, rung_step, value)`` periodically; the
+stopper answers continue/stop.  A trial stops when it reaches a rung and its
+value is outside the top 1/eta of completed values at that rung.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+class ASHA:
+    def __init__(self, min_steps: int = 1, eta: int = 3, max_rungs: int = 6,
+                 goal: str = "max"):
+        self.eta = eta
+        self.goal = goal
+        self.rungs: List[int] = [min_steps * eta ** i for i in range(max_rungs)]
+        self._values: Dict[int, List[float]] = {r: [] for r in self.rungs}
+        self._reported: Dict[str, int] = {}   # trial -> highest rung passed
+
+    def report(self, trial_id: str, step: int, value: float) -> str:
+        """Returns 'continue' or 'stop'."""
+        v = value if self.goal == "max" else -value
+        for rung in self.rungs:
+            if step >= rung and self._reported.get(trial_id, -1) < rung:
+                self._reported[trial_id] = rung
+                vals = self._values[rung]
+                vals.append(v)
+                k = max(1, len(vals) // self.eta)
+                top_k = sorted(vals, reverse=True)[:k]
+                if v < top_k[-1]:
+                    return "stop"
+        return "continue"

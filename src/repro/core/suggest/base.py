@@ -1,0 +1,95 @@
+"""Optimizer interface (ask/tell) + registry.
+
+Conventions:
+* maximization (the experiment config's goal='min' negates values upstream);
+* failed observations carry value=None and are fed back to optimizers so
+  they can avoid re-suggesting broken regions (paper §2.5: HPO surfaces
+  model bugs as failed observations);
+* ask() may be called concurrently with outstanding suggestions (parallel
+  bandwidth) — optimizers must not block on pending results.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.space import Assignment, Space
+
+
+@dataclass
+class Observation:
+    assignment: Assignment
+    value: Optional[float]                 # None => failed
+    stddev: float = 0.0
+    failed: bool = False
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"assignment": self.assignment, "value": self.value,
+                "stddev": self.stddev, "failed": self.failed,
+                "metadata": self.metadata}
+
+    @classmethod
+    def from_json(cls, d) -> "Observation":
+        return cls(d["assignment"], d.get("value"), d.get("stddev", 0.0),
+                   d.get("failed", False), d.get("metadata", {}))
+
+
+class Optimizer(abc.ABC):
+    def __init__(self, space: Space, seed: int = 0):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.history: List[Observation] = []
+
+    @abc.abstractmethod
+    def ask(self, n: int = 1) -> List[Assignment]:
+        ...
+
+    def tell(self, observations: Sequence[Observation]) -> None:
+        self.history.extend(observations)
+        self._update(observations)
+
+    def _update(self, observations: Sequence[Observation]) -> None:
+        pass
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def successes(self) -> List[Observation]:
+        return [o for o in self.history if not o.failed and o.value is not None]
+
+    def best(self) -> Optional[Observation]:
+        succ = self.successes
+        return max(succ, key=lambda o: o.value) if succ else None
+
+    # checkpoint/restore of optimizer state (experiment-level fault
+    # tolerance: the suggestion service resumes from the observation log)
+    def state(self) -> Dict[str, Any]:
+        return {"history": [o.to_json() for o in self.history]}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        obs = [Observation.from_json(d) for d in state.get("history", [])]
+        if obs:
+            self.tell(obs)
+
+
+_REGISTRY: Dict[str, Any] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_optimizer(name: str, space: Space, seed: int = 0,
+                   **options) -> Optimizer:
+    # import for side-effect registration
+    from repro.core.suggest import (bayesopt, evolution, grid, pso,  # noqa
+                                    random_search, sobol)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; have {list(_REGISTRY)}")
+    return _REGISTRY[name](space, seed=seed, **options)

@@ -1,0 +1,101 @@
+"""GP Bayesian optimization with parallel (constant-liar) asking — the
+optimizer class the paper builds its infrastructure around (SigOpt serves
+Bayesian optimization for parallel workers [9]).
+
+ask(n) returns n *distinct* points even before any results return: each
+accepted point is added as a pseudo-observation at the current posterior
+mean ("constant liar"), so simultaneous workers spread out instead of
+piling onto the same optimum — the core requirement for the paper's
+"multiple model configurations simultaneously" workflow.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.space import Assignment, Space
+from repro.core.suggest import gp
+from repro.core.suggest.base import Observation, Optimizer, register
+
+
+@register("gp")
+@register("bayesopt")
+class BayesOpt(Optimizer):
+    def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
+                 candidates: int = 1024, fit_steps: int = 150,
+                 refit_every: int = 1):
+        super().__init__(space, seed)
+        self.n_init = n_init
+        self.n_candidates = candidates
+        self.fit_steps = fit_steps
+        self.refit_every = refit_every
+        self._post = None
+        self._since_fit = 0
+        self._pending: List[np.ndarray] = []   # constant-liar points
+
+    # ------------------------------------------------------------------
+    def _design_matrix(self):
+        xs, ys = [], []
+        for o in self.successes:
+            xs.append(self.space.to_unit(
+                {k: v for k, v in o.assignment.items()
+                 if not k.startswith("__")}))
+            ys.append(o.value)
+        return np.array(xs), np.array(ys)
+
+    def _refit(self):
+        x, y = self._design_matrix()
+        if len(x) < max(2, len(self.space)):
+            self._post = None
+            return
+        # constant liar: pending suggestions pinned at the posterior mean
+        if self._pending and self._post is not None:
+            lie_mu, _ = gp.predict(self._post, np.array(self._pending))
+            x = np.concatenate([x, np.array(self._pending)], axis=0)
+            y = np.concatenate([y, np.asarray(lie_mu)])
+        self._post = gp.fit_gp(x, y, steps=self.fit_steps)
+
+    def ask(self, n: int = 1) -> List[Assignment]:
+        out = []
+        for _ in range(n):
+            if len(self.successes) < self.n_init or self._post is None:
+                a = self.space.sample(self.rng, 1)[0]
+                self._pending.append(self.space.to_unit(a))
+                out.append(a)
+                continue
+            cand = self._candidates()
+            best_y = max(o.value for o in self.successes)
+            ei = np.asarray(gp.expected_improvement(
+                self._post, cand, np.float32(best_y)))
+            pick = cand[int(np.argmax(ei))]
+            self._pending.append(np.array(pick))
+            self._refit()                       # fold the lie in
+            out.append(self.space.from_unit(np.asarray(pick)))
+        return out
+
+    def _candidates(self) -> np.ndarray:
+        d = len(self.space)
+        cand = self.rng.uniform(size=(self.n_candidates, d))
+        # densify around the incumbent (local exploitation pool)
+        inc = self.space.to_unit(
+            {k: v for k, v in self.best().assignment.items()
+             if not k.startswith("__")})
+        local = np.clip(inc[None] + self.rng.normal(
+            0, 0.08, size=(self.n_candidates // 4, d)), 0, 1)
+        return np.concatenate([cand, local], axis=0).astype(np.float32)
+
+    def _update(self, observations: Sequence[Observation]) -> None:
+        # retire matching pending lies
+        for o in observations:
+            u = self.space.to_unit(
+                {k: v for k, v in o.assignment.items()
+                 if not k.startswith("__")})
+            for i, pend in enumerate(self._pending):
+                if np.allclose(pend, u, atol=1e-6):
+                    self._pending.pop(i)
+                    break
+        self._since_fit += len(observations)
+        if self._since_fit >= self.refit_every:
+            self._since_fit = 0
+            self._refit()

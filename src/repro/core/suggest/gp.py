@@ -1,0 +1,131 @@
+"""Gaussian process regression in pure JAX (Matérn-5/2 ARD).
+
+This is the numerical heart of the Bayesian optimizer — the in-repo stand-in
+for SigOpt's hosted service.  Hyperparameters (per-dim lengthscales, signal
+amplitude, noise) are fit by maximizing the exact log marginal likelihood
+with Adam; posteriors use a jitter-stabilized Cholesky.  Everything is jit
+compiled and sized for HPO workloads (n <= a few hundred observations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GPParams(NamedTuple):
+    log_ls: jnp.ndarray       # (d,) log lengthscales
+    log_amp: jnp.ndarray      # () log signal stddev
+    log_noise: jnp.ndarray    # () log noise stddev
+
+
+class GPPosterior(NamedTuple):
+    params: GPParams
+    x: jnp.ndarray            # (n,d) training inputs (unit cube)
+    chol: jnp.ndarray         # (n,n) cholesky of K + noise
+    alpha: jnp.ndarray        # (n,) K^{-1} (y - mean)
+    y_mean: jnp.ndarray       # ()
+    y_std: jnp.ndarray        # ()
+
+
+def _sqdist(a: jnp.ndarray, b: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    a = a / ls
+    b = b / ls
+    return jnp.maximum(
+        jnp.sum(a * a, -1)[:, None] - 2 * a @ b.T + jnp.sum(b * b, -1)[None],
+        0.0)
+
+
+def matern52(a, b, params: GPParams) -> jnp.ndarray:
+    ls = jnp.exp(params.log_ls)
+    amp2 = jnp.exp(2 * params.log_amp)
+    r = jnp.sqrt(_sqdist(a, b, ls) + 1e-12)
+    s5r = jnp.sqrt(5.0) * r
+    return amp2 * (1 + s5r + 5.0 / 3.0 * r * r) * jnp.exp(-s5r)
+
+
+@jax.jit
+def neg_mll(params: GPParams, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    n = x.shape[0]
+    k = matern52(x, x, params)
+    k = k + (jnp.exp(2 * params.log_noise) + 1e-5) * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return (0.5 * y @ alpha
+            + jnp.sum(jnp.log(jnp.diagonal(chol)))
+            + 0.5 * n * jnp.log(2 * jnp.pi))
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit(params0: GPParams, x, y, steps: int = 150, lr: float = 0.05):
+    """Adam on the negative MLL."""
+    def adam_step(carry, _):
+        p, m, v, t = carry
+        g = jax.grad(neg_mll)(p, x, y)
+        t = t + 1
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + 0.1 * gg, m, g)
+        v = jax.tree.map(lambda vv, gg: 0.999 * vv + 0.001 * gg * gg, v, g)
+        mh = jax.tree.map(lambda mm: mm / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + 1e-8),
+                         p, mh, vh)
+        # clamp to sane ranges to keep the Cholesky healthy; reject any
+        # step that went NaN (singular K during the line search)
+        p = GPParams(jnp.clip(p.log_ls, -3.0, 1.5),
+                     jnp.clip(p.log_amp, -3.0, 2.0),
+                     jnp.clip(p.log_noise, -5.0, 1.0))
+        ok = jnp.all(jnp.stack([jnp.all(jnp.isfinite(x))
+                                for x in jax.tree.leaves(p)]))
+        prev = carry[0]
+        p = jax.tree.map(lambda new, old: jnp.where(ok, new, old), p, prev)
+        return (p, m, v, t), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params0)
+    (p, _, _, _), _ = jax.lax.scan(
+        adam_step, (params0, zeros, zeros, jnp.zeros((), jnp.int32)),
+        None, length=steps)
+    return p
+
+
+def fit_gp(x: np.ndarray, y: np.ndarray, steps: int = 150) -> GPPosterior:
+    """x in unit cube (n,d); y raw objective (normalized internally)."""
+    x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64")
+                    else jnp.float32)
+    y_raw = jnp.asarray(y, x.dtype)
+    y_mean = jnp.mean(y_raw)
+    y_std = jnp.maximum(jnp.std(y_raw), 1e-6)
+    yn = (y_raw - y_mean) / y_std
+    d = x.shape[1]
+    p0 = GPParams(jnp.zeros(d) - 0.7, jnp.zeros(()), jnp.zeros(()) - 2.0)
+    p = _fit(p0, x, yn, steps=steps)
+    n = x.shape[0]
+    k = matern52(x, x, p) + (jnp.exp(2 * p.log_noise) + 1e-5) * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), yn)
+    return GPPosterior(p, x, chol, alpha, y_mean, y_std)
+
+
+@jax.jit
+def predict(post: GPPosterior, xq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Posterior mean/stddev at query points (m,d) — in raw y units."""
+    kq = matern52(xq, post.x, post.params)                  # (m,n)
+    mu = kq @ post.alpha
+    v = jax.scipy.linalg.solve_triangular(post.chol, kq.T, lower=True)
+    var = jnp.maximum(
+        matern52(xq, xq, post.params).diagonal() - jnp.sum(v * v, axis=0),
+        1e-12)
+    return (mu * post.y_std + post.y_mean,
+            jnp.sqrt(var) * post.y_std)
+
+
+@jax.jit
+def expected_improvement(post: GPPosterior, xq: jnp.ndarray,
+                         best: jnp.ndarray, xi: float = 0.01) -> jnp.ndarray:
+    mu, sd = predict(post, xq)
+    z = (mu - best - xi) / sd
+    ncdf = 0.5 * (1 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+    npdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2 * jnp.pi)
+    return (mu - best - xi) * ncdf + sd * npdf

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (DataConfig, TokenPipeline, make_batch_fn,
+                                 synthetic_corpus)
+
+__all__ = ["DataConfig", "TokenPipeline", "make_batch_fn",
+           "synthetic_corpus"]

@@ -1,0 +1,7 @@
+from repro.distributed.auto_shard import (auto_spec, batch_seq_spec,
+                                          shard_tree, tree_specs)
+from repro.distributed.hlo import collective_stats
+from repro.distributed.roofline import (HW, roofline_terms)
+
+__all__ = ["auto_spec", "batch_seq_spec", "shard_tree", "tree_specs",
+           "collective_stats", "HW", "roofline_terms"]

@@ -1,0 +1,68 @@
+"""Activation sharding constraints, threaded to the model via a contextvar.
+
+Without anchors, SPMD propagation from fully-sharded parameters onto
+activations picks feature-dim shardings that conflict with the batch/seq
+sharding of the inputs, producing "involuntary full rematerialization"
+resharding chains in the backward pass.  The launcher sets the intended
+activation spec around tracing; the model calls ``constrain`` at layer
+boundaries.  No mesh context (unit tests, population vmap with mismatched
+rank) -> no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_SPEC: contextvars.ContextVar[Optional[P]] = contextvars.ContextVar(
+    "repro_act_spec", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(spec: Optional[P]):
+    tok = _SPEC.set(spec)
+    try:
+        yield
+    finally:
+        _SPEC.reset(tok)
+
+
+def current_spec() -> Optional[P]:
+    return _SPEC.get()
+
+
+def constrain_at(x, batch_dim: int):
+    """Anchor only dim ``batch_dim`` of x to the ambient batch axes — used
+    for recurrent scan carries and time-major xs, whose sharding would
+    otherwise be re-derived (and re-gathered) every loop iteration."""
+    spec = _SPEC.get()
+    if spec is None or getattr(x, "ndim", 0) <= batch_dim:
+        return x
+    parts = [None] * x.ndim
+    parts[batch_dim] = spec[0] if len(spec) > 0 else None
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*parts))
+    except Exception:
+        return x
+
+
+def constrain(x):
+    """Anchor activations to the ambient (batch, seq) spec, rank-adaptively:
+    (B, F) -> P(b, None); (B, S, ...) -> P(b, s, None, ...).  The stored spec
+    is a 2-entry P(batch_axes, seq_axes)."""
+    spec = _SPEC.get()
+    if spec is None or getattr(x, "ndim", 0) < 2:
+        return x
+    b = spec[0] if len(spec) > 0 else None
+    s = spec[1] if len(spec) > 1 else None
+    if x.ndim == 2:
+        full = P(b, None)
+    else:
+        full = P(b, s, *([None] * (x.ndim - 2)))
+    try:
+        return jax.lax.with_sharding_constraint(x, full)
+    except Exception:       # no ambient mesh / abstract eval: stay a no-op
+        return x

@@ -1,0 +1,122 @@
+"""Greedy divisibility-aware sharding rules.
+
+The assigned architectures have head counts (40, 96, 10, 24, ...) and vocab
+sizes (49155, 51865, ...) that do not all divide a fixed 16x16 mesh, so a
+static logical-axis table cannot work across the zoo.  Instead we assign mesh
+axes to tensor dims greedily, largest-axis-to-largest-divisible-dim, which
+fully shards every parameter whose dims allow it and gracefully degrades
+(e.g. granite's 49155-row embedding shards only its d_model dim).
+
+Conventions:
+* ``skip_leading`` skips dim 0 — used for scanned layer stacks, whose leading
+  ``repeats`` dim must stay unsharded (it is sliced every scan iteration).
+* Activation batch/seq sharding comes from ``batch_seq_spec``: batch dim
+  takes as many mesh axes as divide it (pod, data, model order), the sequence
+  dim takes the leftovers (sequence parallelism when batch < chips).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MIN_SHARD_ELEMS = 1 << 20   # replicate leaves below ~1M elements: sharding
+                            # them buys nothing and seeds per-iteration
+                            # gathers inside recurrent while-loops
+
+
+def auto_spec(shape: Sequence[int], mesh: Mesh, *,
+              skip_leading: bool = False,
+              min_elems: int = MIN_SHARD_ELEMS) -> P:
+    """Greedy PartitionSpec: assign each mesh axis (largest first) to the
+    largest tensor dim still divisible by it.  Small leaves are replicated."""
+    n_elems = 1
+    for d in shape:
+        n_elems *= d
+    if n_elems < min_elems:
+        return P(*([None] * len(shape)))
+    assign = [[] for _ in shape]
+    sizes = list(shape)
+    start = 1 if (skip_leading and len(shape) > 1) else 0
+    axes = sorted(mesh.shape.items(), key=lambda kv: -kv[1])
+    for name, n in axes:
+        if n == 1:
+            continue
+        best = -1
+        for i in range(start, len(shape)):
+            if sizes[i] % n == 0 and sizes[i] >= n:
+                if best < 0 or sizes[i] > sizes[best]:
+                    best = i
+        if best >= 0:
+            assign[best].append(name)
+            sizes[best] //= n
+    return P(*[tuple(a) if a else None for a in assign])
+
+
+def tree_specs(tree: Any, mesh: Mesh, *, skip_leading_under: str = "groups"):
+    """PartitionSpec pytree for a parameter pytree.  Leaves under a
+    ``skip_leading_under`` key keep dim 0 (scan repeats) unsharded."""
+    def walk(node, under):
+        if isinstance(node, dict):
+            return {k: walk(v, under or k == skip_leading_under)
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [walk(v, under) for v in node]
+            return type(node)(t)
+        return auto_spec(node.shape, mesh, skip_leading=under)
+    return walk(tree, False)
+
+
+def batch_seq_spec(mesh: Mesh, batch: int, seq: Optional[int]) -> P:
+    """Sharding for (batch, seq, ...) activations: batch over leading mesh
+    axes while divisible, remaining axes over seq (sequence parallelism)."""
+    baxes, saxes = [], []
+    b, s = batch, seq
+    for name in mesh.axis_names:
+        n = mesh.shape[name]
+        if n == 1:
+            continue
+        if not saxes and b % n == 0 and b >= n:
+            b //= n
+            baxes.append(name)
+        elif s is not None and s % n == 0 and s >= n:
+            s //= n
+            saxes.append(name)
+    if seq is None:
+        return P(tuple(baxes) if baxes else None)
+    return P(tuple(baxes) if baxes else None,
+             tuple(saxes) if saxes else None)
+
+
+def shard_tree(tree: Any, mesh: Mesh, specs: Any):
+    """NamedSharding pytree from a spec pytree (for in_shardings)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_bytes(shapes: Any, specs: Any, mesh: Mesh) -> int:
+    """Exact per-device bytes of a pytree of ShapeDtypeStructs under a spec
+    pytree — the analytic 'does it fit' number for the dry-run record."""
+    import math as _math
+
+    total = 0
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    for s, spec in zip(flat_shapes, flat_specs):
+        dims = list(s.shape)
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(dims):
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            f = 1
+            for nm in names:
+                f *= mesh.shape[nm]
+            dims[i] = _math.ceil(dims[i] / f)
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * np.dtype(s.dtype).itemsize
+    return total

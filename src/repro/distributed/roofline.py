@@ -1,0 +1,58 @@
+"""Roofline terms for TPU v5e from the compiled dry-run artifact.
+
+Semantics: ``compiled.cost_analysis()`` on an SPMD-partitioned module reports
+*per-partition* (per-chip) flops and bytes, so the three terms are computed
+per chip directly:
+
+  compute    = flops / PEAK_FLOPS
+  memory     = bytes_accessed / HBM_BW
+  collective = per-chip ring ICI bytes / ICI_BW   (single-link model;
+               multi-link meshes only improve this)
+
+MODEL_FLOPS uses the 6*N*D rule (N = params, D = tokens; N_active for MoE) so
+the useful-compute ratio exposes remat / padding / replication waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class _HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # bytes/s per chip
+    ici_bw: float = 50e9            # bytes/s per link
+
+
+HW = _HW()
+
+
+def roofline_terms(cost: Dict[str, float], ici_bytes_per_chip: float,
+                   *, model_flops_per_chip: Optional[float] = None
+                   ) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0) or 0.0)
+    t_compute = flops / HW.peak_flops
+    t_memory = bytes_accessed / HW.hbm_bw
+    t_coll = ici_bytes_per_chip / HW.ici_bw
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    out = {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "ici_bytes_per_chip": ici_bytes_per_chip,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+    if model_flops_per_chip:
+        out["model_flops_per_chip"] = model_flops_per_chip
+        out["useful_ratio"] = (model_flops_per_chip / flops) if flops else 0.0
+        # fraction of the compute roofline actually achieved at the bound
+        out["roofline_fraction"] = (
+            (model_flops_per_chip / HW.peak_flops) / out["bound_s"]
+            if out["bound_s"] else 0.0)
+    return out

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: blockwise max-abs int8 quantization.
+
+Hot path of the error-feedback compressed gradient all-reduce
+(distributed/compress.py).  One grid step quantizes a (rows, BLOCK) tile:
+reduction + scale + round stay in VMEM/VREGs, quantized bytes stream back
+to HBM at 1/4 the input bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (rows, BLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "interpret"))
+def int8_quantize(x, *, rows: int = 256, interpret: bool = False):
+    """x: any shape -> (q int8 (nb, BLOCK), scales f32 (nb,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    nb = blocks.shape[0]
+    rows_ = min(rows, nb)
+    pad_r = (-nb) % rows_
+    if pad_r:
+        blocks = jnp.pad(blocks, ((0, pad_r), (0, 0)))
+    grid = (blocks.shape[0] // rows_,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows_, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((rows_,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct(blocks.shape, jnp.int8),
+                   jax.ShapeDtypeStruct((blocks.shape[0],), jnp.float32)],
+        interpret=interpret,
+    )(blocks)
+    return q[:nb], s[:nb]

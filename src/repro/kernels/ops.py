@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU these dispatch to the pallas_call kernels; elsewhere (this CPU
+container, unit tests) they run the kernels in interpret mode or fall back
+to the jnp oracle — callers never branch on platform themselves.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int8_quant import int8_quantize as _quant
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    force_kernel=False):
+    if _on_tpu() or force_kernel:
+        return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                      interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=softcap)
+
+
+def rglru_scan(log_a, b, *, force_kernel=False):
+    if _on_tpu() or force_kernel:
+        return _rglru(log_a, b, interpret=not _on_tpu())
+    return ref.rglru_scan_ref(log_a, b)
+
+
+def int8_quantize(x, *, force_kernel=False):
+    if _on_tpu() or force_kernel:
+        return _quant(x, interpret=not _on_tpu())
+    return ref.int8_quant_ref(x)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """q: (B,Sq,H,D); k,v: (B,Skv,K,D) -> (B,Sq,H,D).  Dense masked softmax
+    attention in f32 (the thing flash attention must equal exactly)."""
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) / math.sqrt(D)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a, b, h0=None):
+    """Sequential RG-LRU recurrence oracle.
+    log_a, b: (B,S,R) f32; h0: (B,R) -> h: (B,S,R)."""
+    B, S, R = log_a.shape
+    h = jnp.zeros((B, R), jnp.float32) if h0 is None else h0
+
+    def step(h, xs):
+        la, bb = xs
+        h = h * jnp.exp(la) + bb
+        return h, h
+
+    _, hs = jax.lax.scan(step, h,
+                         (log_a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)
+
+
+def int8_quant_ref(x, block=256):
+    """Blockwise max-abs int8 quantization oracle.
+    x: any shape -> (q int8 (nb, block), scales f32 (nb,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127)
+    return q.astype(jnp.int8), scale

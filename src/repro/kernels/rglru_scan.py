@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence h_t = a_t*h_{t-1}+b_t.
+
+TPU adaptation: the recurrence is elementwise over the feature dim, so the
+natural layout is feature tiles resident in VMEM while TIME is the
+innermost sequential grid axis; the hidden state lives in VMEM scratch
+across time tiles (zero HBM traffic for the carry).  Within a (bt, bf) tile
+the time loop is a fori over rows — bandwidth-bound as expected, so tiles
+are sized to stream log_a/b at full HBM rate: (bt, bf) = (256, 512) f32
+-> 1 MB/operand in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(la_ref, b_ref, o_ref, h_scr, *, bt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    def step(i, h):
+        la = la_ref[0, i, :]
+        bb = b_ref[0, i, :]
+        h = h * jnp.exp(la) + bb
+        o_ref[0, i, :] = h
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, bt, step, h_scr[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bt", "bf", "interpret"))
+def rglru_scan(log_a, b, *, bt: int = 256, bf: int = 512,
+               interpret: bool = False):
+    """log_a, b: (B,S,R) f32 -> h (B,S,R) f32."""
+    B, S, R = log_a.shape
+    bt_ = min(bt, S)
+    bf_ = min(bf, R)
+    pad_t = (-S) % bt_
+    pad_f = (-R) % bf_
+    if pad_t or pad_f:
+        padc = ((0, 0), (0, pad_t), (0, pad_f))
+        log_a = jnp.pad(log_a, padc)      # exp(0)=1, b=0 -> state invariant
+        b = jnp.pad(b, padc)
+    St, Rt = log_a.shape[1], log_a.shape[2]
+    # grid: time INNERMOST so the VMEM carry is sequential-correct
+    grid = (B, Rt // bf_, St // bt_)
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, bt=bt_),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bt_, bf_), lambda bi, fi, ti: (bi, ti, fi)),
+            pl.BlockSpec((1, bt_, bf_), lambda bi, fi, ti: (bi, ti, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bt_, bf_),
+                               lambda bi, fi, ti: (bi, ti, fi)),
+        out_shape=jax.ShapeDtypeStruct(log_a.shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bf_,), jnp.float32)],
+        interpret=interpret,
+    )(log_a.astype(jnp.float32), b.astype(jnp.float32))
+    return out[:, :S, :R]

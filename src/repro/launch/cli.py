@@ -1,0 +1,127 @@
+"""The six CLI verbs (paper §3.1), model- and language-agnostic:
+
+  repro cluster create -f cluster.yml
+  repro run -f experiment.yml [--cluster NAME]
+  repro status EXPERIMENT_ID
+  repro logs [--follow] EXPERIMENT_ID
+  repro delete EXPERIMENT_ID
+  repro cluster destroy -n CLUSTER_NAME
+
+`run` executes the experiment's entrypoint ("module:function") under the
+scheduler; with --background it returns immediately (monitor with
+status/logs), mirroring the paper's split-screen workflow (Fig. 4).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import yaml
+
+from repro.core.experiment import ExperimentConfig
+from repro.core.monitor import (format_cluster_status,
+                                format_experiment_status)
+from repro.core.orchestrator import Orchestrator
+
+
+def _load(path: str):
+    with open(path) as f:
+        return yaml.safe_load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro",
+                                 description="Orchestrate-JAX CLI")
+    ap.add_argument("--store", default=".orchestrate")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_cluster = sub.add_parser("cluster")
+    csub = p_cluster.add_subparsers(dest="ccmd", required=True)
+    c_create = csub.add_parser("create")
+    c_create.add_argument("-f", "--file", required=True)
+    c_destroy = csub.add_parser("destroy")
+    c_destroy.add_argument("-n", "--name", required=True)
+    c_status = csub.add_parser("status")
+    c_status.add_argument("-n", "--name", required=True)
+
+    p_run = sub.add_parser("run")
+    p_run.add_argument("-f", "--file", required=True)
+    p_run.add_argument("--cluster", default=None)
+    p_run.add_argument("--background", action="store_true")
+
+    p_status = sub.add_parser("status")
+    p_status.add_argument("experiment_id")
+
+    p_logs = sub.add_parser("logs")
+    p_logs.add_argument("experiment_id")
+    p_logs.add_argument("--follow", action="store_true")
+
+    p_delete = sub.add_parser("delete")
+    p_delete.add_argument("experiment_id")
+
+    p_list = sub.add_parser("list")
+
+    args = ap.parse_args(argv)
+    orch = Orchestrator(args.store)
+
+    if args.cmd == "cluster":
+        if args.ccmd == "create":
+            cluster = orch.cluster_create(_load(args.file))
+            print(f"cluster {cluster.name!r} created")
+            print(format_cluster_status(cluster.status()))
+        elif args.ccmd == "destroy":
+            ok = orch.cluster_destroy(args.name)
+            print(f"cluster {args.name!r} "
+                  f"{'destroyed' if ok else 'not found'}")
+            print("experiment records remain in the store")
+            return 0 if ok else 1
+        else:
+            print(format_cluster_status(orch.cluster_status(args.name)))
+        return 0
+
+    if args.cmd == "run":
+        cfg = ExperimentConfig.from_json(_load(args.file))
+        exp_id = orch.run(cfg, cluster=args.cluster,
+                          background=args.background)
+        print(f"experiment {exp_id} "
+              f"{'started' if args.background else 'complete'}")
+        if not args.background:
+            print(format_experiment_status(exp_id, orch.status(exp_id)))
+        else:
+            # foreground process keeps the background scheduler alive
+            try:
+                while orch.status(exp_id).get("state") == "running":
+                    time.sleep(0.5)
+            except KeyboardInterrupt:
+                orch.delete(exp_id)
+        return 0
+
+    if args.cmd == "status":
+        print(format_experiment_status(args.experiment_id,
+                                       orch.status(args.experiment_id)))
+        return 0
+
+    if args.cmd == "logs":
+        for line in orch.logs(args.experiment_id, follow=args.follow):
+            print(line)
+        return 0
+
+    if args.cmd == "delete":
+        orch.delete(args.experiment_id)
+        print(f"experiment {args.experiment_id} deleted "
+              f"(records remain in the store)")
+        return 0
+
+    if args.cmd == "list":
+        for e in orch.store.list_experiments():
+            st = orch.store.get_status(e)
+            print(f"{e}  {st.get('state', '?'):10s} "
+                  f"obs={st.get('observations', 0)}")
+        return 0
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

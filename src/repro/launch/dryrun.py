@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against 512 placeholder host devices, prove the sharding config is
+coherent (memory fits, collectives legal), and emit the roofline terms.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init.  Never set this flag globally: smoke tests and benches
+must see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch phi3-medium-14b --shape train_4k
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --all --mesh pod # every cell, single mesh
+
+Artifacts: one JSON per cell under results/dryrun/ — EXPERIMENTS.md tables
+are generated from these.
+"""
+import argparse
+import gc
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import (cache_specs, get_config, input_specs,
+                                    list_archs)
+from repro.distributed.act_sharding import activation_sharding
+from repro.distributed.auto_shard import sharded_bytes
+from repro.distributed.hlo import analyze
+from repro.distributed.roofline import roofline_terms
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.models.common import SHAPES, shape_applicable
+from repro.optim import AdamWConfig
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes", "peak_memory_in_bytes")
+    return {k: getattr(mem, k) for k in keys if hasattr(mem, k)}
+
+
+def apply_opts(cfg, opts):
+    """Hillclimb knobs: comma list like 'remat=none,scan=off'."""
+    import dataclasses
+    over = {}
+    for item in (opts or "").split(","):
+        if not item:
+            continue
+        k, _, v = item.partition("=")
+        if k == "remat":
+            over["remat"] = v
+        elif k == "scan":
+            over["scan_layers"] = v not in ("off", "0", "false")
+        elif k == "dtype":
+            over["dtype"] = v
+        elif k == "capacity":
+            over["capacity_factor"] = float(v)
+        else:
+            raise ValueError(f"unknown opt {k}")
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
+             opts: str = "", verbose: bool = True) -> dict:
+    cfg = apply_opts(get_config(arch), opts)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{opts}" if opts else "")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "opts": opts, "ok": False}
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(skipped=True, skip_reason=reason, ok=True)
+        _write(out_dir, tag, rec)
+        if verbose:
+            print(f"[dryrun] {tag}: SKIP ({reason})")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    t0 = time.time()
+    try:
+        n_params = cfg.param_count()
+        n_active = cfg.active_param_count()
+        specs_in = input_specs(cfg, shape)
+        arg_bytes = 0
+        with mesh:
+            if shape.kind == "train":
+                st_shapes = S.train_state_shapes(cfg)
+                st_specs = S.state_specs(cfg, mesh, st_shapes)
+                model, step = S.make_train_step(
+                    cfg, AdamWConfig(), grad_specs=st_specs["params"])
+                b_specs = S.batch_specs(cfg, shape, mesh, specs_in)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(S.named(mesh, st_specs),
+                                  S.named(mesh, b_specs)),
+                    out_shardings=(S.named(mesh, st_specs), None),
+                    donate_argnums=0)
+                tok_sp = b_specs["tokens"]
+                act = P(tok_sp[0], tok_sp[1])
+                with activation_sharding(act):
+                    lowered = jitted.lower(st_shapes, specs_in)
+                arg_bytes = sharded_bytes(st_shapes, st_specs, mesh)
+                tokens = shape.global_batch * shape.seq_len
+                model_flops = 6.0 * n_params * tokens
+                if cfg.moe:
+                    model_flops = 6.0 * n_active * tokens
+            elif shape.kind == "prefill":
+                model, step = S.make_prefill_step(cfg, shape.seq_len)
+                st_shapes = S.cast_param_shapes(
+                    S.train_state_shapes(cfg)["params"], cfg.compute_dtype)
+                p_specs = S.state_specs(cfg, mesh,
+                                        {"params": st_shapes, "opt": None}
+                                        )["params"]
+                b_specs = S.batch_specs(cfg, shape, mesh, specs_in)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(S.named(mesh, p_specs),
+                                  S.named(mesh, b_specs)))
+                tok_sp = b_specs["tokens"]
+                act = P(tok_sp[0], tok_sp[1])
+                with activation_sharding(act):
+                    lowered = jitted.lower(st_shapes, specs_in)
+                arg_bytes = sharded_bytes(st_shapes, p_specs, mesh)
+                tokens = shape.global_batch * shape.seq_len
+                model_flops = 2.0 * (n_active if cfg.moe else n_params) * tokens
+            else:  # decode
+                model, step = S.make_serve_step(cfg)
+                st_shapes = S.cast_param_shapes(
+                    S.train_state_shapes(cfg)["params"], cfg.compute_dtype)
+                p_specs = S.state_specs(cfg, mesh,
+                                        {"params": st_shapes, "opt": None}
+                                        )["params"]
+                cshapes, cspecs, tok_spec = S.decode_specs(cfg, shape, mesh)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(S.named(mesh, p_specs),
+                                  S.named(mesh, cspecs),
+                                  S.named(mesh, tok_spec)),
+                    out_shardings=(S.named(mesh, tok_spec),
+                                   S.named(mesh, cspecs)),
+                    donate_argnums=1)
+                act = P(tok_spec[0] if len(tok_spec) else None, None)
+                with activation_sharding(act):
+                    lowered = jitted.lower(st_shapes, cshapes,
+                                           specs_in["tokens"])
+                arg_bytes = (sharded_bytes(st_shapes, p_specs, mesh)
+                             + sharded_bytes(cshapes, cspecs, mesh))
+                model_flops = 2.0 * (n_active if cfg.moe else n_params) \
+                    * shape.global_batch
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = _mem_dict(compiled.memory_analysis())
+        xla_cost = compiled.cost_analysis() or {}
+        xla_small = {k: v for k, v in xla_cost.items()
+                     if k in ("flops", "bytes accessed", "transcendentals")}
+        # trip-count-aware per-chip analysis (XLA's own cost_analysis counts
+        # while bodies once; see distributed/hlo.py)
+        hlo_text = compiled.as_text()
+        _dump_hlo(out_dir, tag, hlo_text)
+        hlo = analyze(hlo_text, n_dev)
+        terms = roofline_terms(
+            hlo, hlo["ici_bytes"],
+            model_flops_per_chip=model_flops / n_dev)
+        rec.update(
+            ok=True, n_devices=n_dev, params=n_params, active_params=n_active,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            arg_bytes_per_device=arg_bytes,
+            memory=mem, xla_cost_while_once=xla_small,
+            collectives={"counts": hlo["collective_counts"],
+                         "ici_bytes": hlo["collective_bytes"],
+                         "total_ici_bytes": hlo["ici_bytes"]},
+            roofline=terms)
+        if verbose:
+            print(f"[dryrun] {tag}: OK compile={t_compile:.0f}s "
+                  f"dominant={terms['dominant']} "
+                  f"frac={terms.get('roofline_fraction', 0):.3f} "
+                  f"args/dev={arg_bytes/2**30:.2f}GiB")
+            print("  memory_analysis:", mem)
+            print("  cost_analysis(xla, while-once):", xla_small)
+            print("  hlo_analysis(per-chip):",
+                  {k: hlo[k] for k in ('flops', 'bytes accessed',
+                                       'ici_bytes')})
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc())
+        if verbose:
+            print(f"[dryrun] {tag}: FAIL {type(e).__name__}: {e}")
+    _write(out_dir, tag, rec)
+    gc.collect()
+    return rec
+
+
+def _dump_hlo(out_dir: pathlib.Path, tag: str, text: str):
+    """Gzipped compiled HLO per cell: lets analyzer improvements re-score
+    the whole table without recompiling (see scripts/reanalyze.py)."""
+    import gzip
+    hdir = out_dir.parent / "hlo"
+    hdir.mkdir(parents=True, exist_ok=True)
+    with gzip.open(hdir / f"{tag}.txt.gz", "wt") as f:
+        f.write(text)
+
+
+def _write(out_dir: pathlib.Path, tag: str, rec: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=("pod", "multipod",
+                                                       "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opts", default="", help="hillclimb overrides")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+    out = pathlib.Path(args.out)
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape}__{mesh_name}" + (
+                    f"__{args.opts}" if args.opts else "")
+                if args.skip_existing and (out / f"{tag}.json").exists():
+                    prev = json.loads((out / f"{tag}.json").read_text())
+                    if prev.get("ok"):
+                        print(f"[dryrun] {tag}: cached OK")
+                        continue
+                rec = run_cell(arch, shape, mp, out, args.opts)
+                n_fail += 0 if rec.get("ok") else 1
+    print(f"[dryrun] done, failures={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

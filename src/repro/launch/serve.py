@@ -1,0 +1,79 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.launch import steps as S
+from repro.models import LM
+
+
+def serve(arch: str, batch: int, prompt_len: int, gen: int, *,
+          reduced=True, seed=0, log=print):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    model = LM(cfg)
+    params = S.cast_params(model.init(jax.random.key(seed)),
+                           cfg.compute_dtype)
+
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
+    pbatch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        pbatch["img_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.n_img_tokens, cfg.d_model)),
+            cfg.compute_dtype)
+    elif cfg.family == "encdec":
+        pbatch["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.encoder_seq, cfg.d_model)),
+            cfg.compute_dtype)
+
+    cache_len = prompt_len + gen
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len))
+    _, serve_step = S.make_serve_step(cfg)
+    serve_step = jax.jit(serve_step, donate_argnums=1)
+
+    t0 = time.time()
+    cache, logits = prefill(params, pbatch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen - 1):
+        tok, cache = serve_step(params, cache, tok)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    seqs = jnp.stack(out, axis=1)
+    log(f"[serve] prefill {batch}x{prompt_len} in {t_prefill * 1e3:.1f}ms; "
+        f"decoded {gen - 1} steps in {t_decode * 1e3:.1f}ms "
+        f"({(gen - 1) * batch / max(t_decode, 1e-9):.1f} tok/s)")
+    return np.asarray(seqs)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+    seqs = serve(args.arch, args.batch, args.prompt_len, args.gen,
+                 reduced=args.reduced)
+    print(f"generated shape: {seqs.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""jit-able step functions + their sharding specs for a given (arch, shape,
+mesh) cell.  Used by the dry-run, the real trainer, and the server.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import cache_specs, input_specs
+from repro.distributed.auto_shard import (auto_spec, batch_seq_spec,
+                                          tree_specs)
+from repro.models import LM
+from repro.models.common import ModelConfig, ShapeSpec
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+# ==========================================================================
+# step builders (pure functions of pytrees)
+# ==========================================================================
+def cast_params(params, dtype):
+    """Cast float leaves (f32 masters) to the compute dtype.  Done ONCE per
+    step outside the layer scan so FSDP all-gathers move bf16, not f32 —
+    this halves parameter collective traffic."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+
+
+def cast_param_shapes(shapes, dtype):
+    """ShapeDtypeStruct mirror of ``cast_params`` (serving loads weights
+    pre-cast; the dry-run lowers against bf16 param specs)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), shapes)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, schedule=None,
+                    grad_specs=None):
+    """grad_specs: optional PartitionSpec pytree matching the params.
+    Anchoring gradients to the parameter sharding lets the SPMD partitioner
+    emit per-layer reduce-scatters instead of full f32 all-reduces — 2x less
+    gradient ICI traffic (§Perf iteration 2)."""
+    model = LM(cfg)
+
+    def train_step(state, batch):
+        # differentiate w.r.t. the bf16-cast params (casts dedupe, FSDP
+        # gathers move bf16); AdamW re-accumulates in f32.
+        p_c = cast_params(state["params"], cfg.compute_dtype)
+
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p_c)
+        if grad_specs is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_specs)
+        lr = schedule(state["opt"]["step"]) if schedule else opt_cfg.lr
+        new_p, new_opt, om = adamw_update(
+            grads, state["opt"], state["params"], opt_cfg, lr)
+        metrics = dict(metrics, loss=loss, lr=lr, **om)
+        return {"params": new_p, "opt": new_opt}, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    model = LM(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len)
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One greedy decode step: (params, cache, tokens) -> (next, cache)."""
+    model = LM(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return model, serve_step
+
+
+def init_train_state(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    model = LM(cfg)
+    params = model.init(rng)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def train_state_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.key(0)))
+
+
+# ==========================================================================
+# sharding specs per cell
+# ==========================================================================
+def state_specs(cfg: ModelConfig, mesh: Mesh, state_shapes) -> Any:
+    """Params + optimizer state: greedy auto-sharding (scan dims skipped)."""
+    p_specs = tree_specs(state_shapes["params"], mesh)
+    return {"params": p_specs,
+            "opt": {"m": p_specs, "v": p_specs, "step": P()}}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Activation input shardings for train/prefill batches."""
+    out = {}
+    for name, s in specs.items():
+        if name in ("tokens", "labels"):
+            out[name] = batch_seq_spec(mesh, s.shape[0], s.shape[1])
+        elif name in ("img_embeds", "frames"):
+            bs = batch_seq_spec(mesh, s.shape[0], s.shape[1])
+            out[name] = P(*bs, None)
+        else:
+            raise KeyError(name)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Any:
+    """(cache_specs_tree, token_spec) shardings for serve_step."""
+    cshapes = cache_specs(cfg, shape)
+
+    def leaf_spec(x):
+        return auto_spec(x.shape, mesh, skip_leading=True)
+
+    cspecs = jax.tree.map(leaf_spec, cshapes)
+    # 'pos' is (B,): shard over what divides, else replicate
+    cspecs["pos"] = batch_seq_spec(mesh, shape.global_batch, None)
+    tok = batch_seq_spec(mesh, shape.global_batch, None)
+    return cshapes, cspecs, tok
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+"""Model substrate: unified LM over all assigned architecture families."""
+from repro.models.common import ModelConfig, ShapeSpec, SHAPES, shape_applicable
+from repro.models.model import LM
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "shape_applicable", "LM"]

@@ -1,0 +1,351 @@
+"""Attention flavours: GQA global, sliding-window local, cross, and MLA.
+
+Design notes
+------------
+* Chunked causal attention: for long sequences the query axis is processed in
+  static chunks, each attending only to the (statically sliced) prefix — the
+  compiled FLOPs are the exact triangular S^2/2, not the masked-dense S^2,
+  and peak memory is (B, H, chunk, S) instead of (B, H, S, S).
+* Sliding-window attention slices a static (window + chunk) KV band per query
+  chunk — sub-quadratic in S (this is what makes recurrentgemma long-context
+  capable).
+* MLA (DeepSeek): training uses the naive expanded form; decode uses the
+  *absorbed* form whose KV cache is the compressed latent (kv_lora + rope
+  dims per token), the technique's entire point.
+* All softmax statistics in f32.  Decode exposes a chunk-local form
+  (``decode_attend_chunk``) returning (numerator, max, denom) so the launcher
+  can combine shards across a sequence-sharded KV cache with one tiny psum
+  (distributed flash-decode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -2.0 ** 30  # safe for f32/bf16 masks (avoid actual -inf NaN paths)
+_Q_CHUNK = 2048
+
+
+# ==========================================================================
+# parameter init
+# ==========================================================================
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
+    if cfg.mla and not cross:
+        return _init_mla(key, cfg)
+    hd = cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    kv_heads = cfg.n_kv_heads
+    p = {
+        "wq": L.init_dense(k1, cfg.d_model, cfg.n_heads * hd, cfg),
+        "wk": L.init_dense(k2, cfg.d_model, kv_heads * hd, cfg),
+        "wv": L.init_dense(k3, cfg.d_model, kv_heads * hd, cfg),
+        "wo": L.init_dense(k4, cfg.n_heads * hd, cfg.d_model, cfg),
+    }
+    return p
+
+
+def _init_mla(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": L.init_dense(ks[0], cfg.d_model, H * qd, cfg),
+        "w_dkv": L.init_dense(ks[1], cfg.d_model, cfg.kv_lora_rank, cfg),
+        "w_kr": L.init_dense(ks[2], cfg.d_model, cfg.qk_rope_dim, cfg),
+        "w_uk": L.init_dense(ks[3], cfg.kv_lora_rank, H * cfg.qk_nope_dim, cfg),
+        "w_uv": L.init_dense(ks[4], cfg.kv_lora_rank, H * cfg.v_head_dim, cfg),
+        "wo": L.init_dense(ks[5], H * cfg.v_head_dim, cfg.d_model, cfg),
+    }
+
+
+# ==========================================================================
+# core attend (GQA, f32 softmax, optional softcap)
+# ==========================================================================
+def _scores(q, k, scale, softcap):
+    # q: (B,Sq,K,G,D)  k: (B,Skv,K,D)  ->  (B,K,G,Sq,Skv)
+    # Scores materialize in the COMPUTE dtype (bf16 on TPU): the MXU still
+    # accumulates the dot in f32 internally, but the (Sq,Skv) score tensor —
+    # the dominant HBM term of dense-attention training — is stored at
+    # 2 bytes/elem (§Perf iteration 3).  Softmax row stats stay f32-safe
+    # via the max-subtraction in _attend_block.
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=q.dtype) * jnp.asarray(
+                       scale, q.dtype)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    return s
+
+
+def _attend_block(q, k, v, mask, scale, softcap):
+    s = _scores(q, k, scale, softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    # stable softmax with bf16-materialized probabilities: row stats stay
+    # f32 but the (bq, Skv) probability tensor — the dominant HBM term of
+    # dense-attention training (EXPERIMENTS.md §Perf iteration 2) — is
+    # stored at 2 bytes/elem, exactly as flash kernels do.
+    # the whole probability chain stays in the compute dtype — any f32 cast
+    # here forces f32 residuals into the backward pass and doubles the
+    # dominant HBM term (measured, §Perf iteration 3); the max-subtraction
+    # keeps exp in (0,1] so bf16 range is safe, and the normalizer sum
+    # accumulates in f32.
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1))              # (B,K,G,Sq)
+    p = jnp.exp(s - m[..., None])                               # bf16 probs
+    inv = 1.0 / jnp.maximum(
+        jnp.sum(p, axis=-1, dtype=jnp.float32), 1e-30)          # (B,K,G,Sq)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)                 # (B,Sq,K,G,D)
+    return out * inv.transpose(0, 3, 1, 2)[..., None].astype(out.dtype)
+
+
+def _split_heads(x, n_heads, kv_heads):
+    B, S, _ = x.shape
+    return x.reshape(B, S, kv_heads, n_heads // kv_heads, -1)
+
+
+def multihead_attention(q, k, v, *, q_positions, kv_positions,
+                        causal: bool, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B,Sq,H,D); k,v: (B,Skv,K,D). Returns (B,Sq,H,Dv).
+
+    Chunked over the query axis with static prefix/band KV slices so compiled
+    FLOPs match the true masked workload.
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, K, H // K, D)
+
+    def block(qc, kc, vc, qpos, kpos):
+        m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+        if causal:
+            m = qpos[:, None] >= kpos[None, :]
+        if window:
+            m &= (qpos[:, None] - kpos[None, :]) < window
+        out = _attend_block(qc, kc, vc, m[None, None, None], scale, softcap)
+        return out
+
+    Skv = k.shape[1]
+    if Sq <= _Q_CHUNK or not causal:
+        out = block(qg, k, v, q_positions, kv_positions)
+        return out.reshape(B, Sq, H, -1)
+
+    # --- triangular / banded chunking (static python loop) ----------------
+    chunk = _Q_CHUNK
+    n_chunks = math.ceil(Sq / chunk)
+    outs = []
+    for i in range(n_chunks):
+        q0, q1 = i * chunk, min((i + 1) * chunk, Sq)
+        if window:
+            k0 = max(0, q0 - (window - 1))
+        else:
+            k0 = 0
+        k1 = min(q1, Skv)
+        qc = qg[:, q0:q1]
+        outs.append(block(qc, k[:, k0:k1], v[:, k0:k1],
+                          q_positions[q0:q1], kv_positions[k0:k1]))
+    return jnp.concatenate(outs, axis=1).reshape(B, Sq, H, -1)
+
+
+# ==========================================================================
+# standard (GQA) attention layer: train / prefill / decode
+# ==========================================================================
+def attn_forward(p: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                 cfg: ModelConfig, *, causal: bool = True, window: int = 0,
+                 kv_source: Optional[jnp.ndarray] = None,
+                 kv_positions: Optional[jnp.ndarray] = None,
+                 return_kv: bool = False):
+    """Full-sequence attention (training / prefill).  kv_source enables
+    cross-attention (encoder output)."""
+    if cfg.mla and kv_source is None:
+        return _mla_forward(p, x, positions, cfg, return_kv=return_kv)
+    hd = cfg.hd
+    src = x if kv_source is None else kv_source
+    kv_positions = positions if kv_positions is None else kv_positions
+    q = dense3(p["wq"], x, cfg.n_heads, hd)
+    k = dense3(p["wk"], src, cfg.n_kv_heads, hd)
+    v = dense3(p["wv"], src, cfg.n_kv_heads, hd)
+    if kv_source is None and cfg.pos_kind == "rope":  # self-attention RoPE
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, kv_positions, cfg.rope_theta)
+    out = multihead_attention(
+        q, k, v, q_positions=positions, kv_positions=kv_positions,
+        causal=causal and kv_source is None, window=window,
+        softcap=cfg.attn_softcap)
+    y = L.dense(p["wo"], out.reshape(*x.shape[:-1], -1))
+    if return_kv:
+        return y, {"k": k, "v": v}
+    return y
+
+
+def dense3(p: Params, x: jnp.ndarray, heads: int, hd: int) -> jnp.ndarray:
+    y = L.dense(p, x)
+    return y.reshape(*x.shape[:-1], heads, hd)
+
+
+def init_cache_attn(cfg: ModelConfig, batch: int, cache_len: int, *,
+                    window: int = 0, dtype=None) -> Dict[str, jnp.ndarray]:
+    """Zeroed KV cache entry for one attention layer."""
+    dtype = dtype or cfg.compute_dtype
+    S = min(cache_len, window) if window else cache_len
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((batch, S, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, S, cfg.qk_rope_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, S, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def decode_attend_chunk(q, k, v, q_pos, kv_pos, *, scale, softcap=0.0,
+                        window: int = 0):
+    """One-token attention over a KV chunk, returning combinable stats.
+
+    q: (B,H,D); k,v: (B,S,K,D); kv_pos: (B,S) absolute positions (< 0 or
+    > q_pos entries are masked).  Returns (num (B,H,Dv), mx (B,H), den (B,H)).
+    Shards of a sequence-partitioned cache combine via ``combine_decode``.
+    """
+    B, H, D = q.shape
+    K = k.shape[2]
+    qg = q.reshape(B, K, H // K, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window:
+        valid &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    mx = jnp.max(s, axis=-1)                                   # (B,K,G)
+    w = jnp.exp(s - mx[..., None])
+    den = jnp.sum(w, axis=-1)
+    num = jnp.einsum("bkgs,bskd->bkgd", w.astype(v.dtype), v)
+    return (num.reshape(B, H, -1), mx.reshape(B, H), den.reshape(B, H))
+
+
+def combine_decode(parts):
+    """Combine per-chunk (num, mx, den) stats -> (B,H,Dv) output."""
+    nums, mxs, dens = zip(*parts)
+    mx = jnp.max(jnp.stack(mxs), axis=0)                       # (B,H)
+    out_num = 0.0
+    out_den = 0.0
+    for n, m, d in parts:
+        c = jnp.exp(m - mx)
+        out_num = out_num + n.astype(jnp.float32) * c[..., None]
+        out_den = out_den + d * c
+    return (out_num / jnp.maximum(out_den, 1e-37)[..., None])
+
+
+def attn_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                pos: jnp.ndarray, cfg: ModelConfig, *, window: int = 0):
+    """Single-token decode.  x: (B,1,d); pos: (B,) absolute position.
+    Returns (y (B,1,d), new_cache)."""
+    if cfg.mla:
+        return _mla_decode(p, x, cache, pos, cfg)
+    hd = cfg.hd
+    B = x.shape[0]
+    q = dense3(p["wq"], x, cfg.n_heads, hd)[:, 0]              # (B,H,D)
+    k1 = dense3(p["wk"], x, cfg.n_kv_heads, hd)[:, 0]
+    v1 = dense3(p["wv"], x, cfg.n_kv_heads, hd)[:, 0]
+    if cfg.pos_kind == "rope":
+        q = L.apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k1 = L.apply_rope(k1[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    S = cache["k"].shape[1]
+    slot = (pos % S) if window else pos                        # ring buffer
+    k = _cache_insert(cache["k"], k1, slot)
+    v = _cache_insert(cache["v"], v1, slot)
+    kv_pos = _cache_positions(pos, S, window)
+    stats = decode_attend_chunk(q, k, v, pos, kv_pos,
+                                scale=1.0 / math.sqrt(hd),
+                                softcap=cfg.attn_softcap, window=window)
+    out = combine_decode([stats]).astype(x.dtype)
+    y = L.dense(p["wo"], out.reshape(B, 1, -1)[:, 0])[:, None]
+    return y, {"k": k, "v": v}
+
+
+def _cache_insert(buf: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray):
+    """Insert per-batch row `new` at per-batch index `slot` (vmap'd)."""
+    return jax.vmap(lambda b, n, s: jax.lax.dynamic_update_index_in_dim(
+        b, n.astype(b.dtype), s, 0))(buf, new, slot)
+
+
+def _cache_positions(pos: jnp.ndarray, S: int, window: int) -> jnp.ndarray:
+    """Absolute position of every cache slot; -1 marks unwritten slots."""
+    idx = jnp.arange(S)[None, :]                               # (1,S)
+    if window:
+        # slot s holds the most recent position p with p % S == s, p <= pos
+        cur = pos[:, None]
+        cand = cur - ((cur % S) - idx) % S
+        return jnp.where(cand >= 0, cand, -1)
+    return jnp.where(idx <= pos[:, None], idx, -1)
+
+
+# ==========================================================================
+# MLA
+# ==========================================================================
+def _mla_qkr(p, x, positions, cfg):
+    H = cfg.n_heads
+    q = dense3(p["wq"], x, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_forward(p, x, positions, cfg, *, return_kv=False):
+    """Naive (expanded) MLA for training/prefill."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_qkr(p, x, positions, cfg)
+    ckv = L.dense(p["w_dkv"], x)                               # (B,S,R)
+    kr = L.dense(p["w_kr"], x).reshape(B, S, 1, cfg.qk_rope_dim)
+    kr = L.apply_rope(kr, positions, cfg.rope_theta)           # shared head
+    k_nope = L.dense(p["w_uk"], ckv).reshape(B, S, H, cfg.qk_nope_dim)
+    v = L.dense(p["w_uv"], ckv).reshape(B, S, H, cfg.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr, (B, S, H, cfg.qk_rope_dim))],
+                        axis=-1)
+    out = multihead_attention(q, k, v, q_positions=positions,
+                              kv_positions=positions, causal=True)
+    y = L.dense(p["wo"], out.reshape(B, S, -1))
+    if return_kv:
+        return y, {"ckv": ckv, "kr": kr[:, :, 0]}
+    return y
+
+
+def _mla_decode(p, x, cache, pos, cfg):
+    """Absorbed MLA decode: scores live in the compressed latent space, the
+    cache holds only (kv_lora_rank + rope) floats per token."""
+    B = x.shape[0]
+    H, R = cfg.n_heads, cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = _mla_qkr(p, x, pos[:, None], cfg)         # (B,1,H,*)
+    # absorb W_uk:  q_lat[b,h,r] = sum_d q_nope[b,h,d] * W_uk[r, h*d]
+    w_uk = p["w_uk"]["w"].reshape(R, H, cfg.qk_nope_dim).astype(x.dtype)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    ckv1 = L.dense(p["w_dkv"], x)[:, 0]                        # (B,R)
+    kr1 = L.dense(p["w_kr"], x)                                # (B,1,rope)
+    kr1 = L.apply_rope(kr1[:, :, None], pos[:, None], cfg.rope_theta)[:, 0, 0]
+    ckv = _cache_insert(cache["ckv"], ckv1, pos)
+    kr = _cache_insert(cache["kr"], kr1, pos)
+    S = ckv.shape[1]
+    kv_pos = _cache_positions(pos, S, 0)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhe,bse->bhs", q_rope[:, 0].astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out_lat = jnp.einsum("bhs,bsr->bhr", prob, ckv)            # (B,H,R)
+    w_uv = p["w_uv"]["w"].reshape(R, H, cfg.v_head_dim).astype(x.dtype)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, w_uv)
+    y = L.dense(p["wo"], out.reshape(B, 1, -1)[:, 0])[:, None]
+    return y, {"ckv": ckv, "kr": kr}

@@ -1,0 +1,125 @@
+"""Small convolutional classifier — the paper's §4 alpha-test model
+("a convolutional neural network with 3 convolutional layers and 2 fully
+connected layers ... trained on the German traffic sign dataset").
+
+The dataset here is a seeded synthetic stand-in (43 classes of structured
+32x32x3 patterns + noise) since the container is offline; the architecture
+matches the paper's description and is the workload for examples/hpo_cnn.py
+and the parallel-speedup benchmark.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_CLASSES = 43
+IMG = 32
+
+
+@dataclass(frozen=True)
+class CNNConfig:
+    channels: Tuple[int, int, int] = (16, 32, 64)
+    fc_width: int = 128
+    n_classes: int = N_CLASSES
+
+
+def init_cnn(key, cfg: CNNConfig = CNNConfig()):
+    ks = jax.random.split(key, 5)
+    c0 = 3
+    params = {}
+    for i, c in enumerate(cfg.channels):
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(ks[i], (3, 3, c0, c), jnp.float32)
+            * math.sqrt(2.0 / (9 * c0)),
+            "b": jnp.zeros((c,), jnp.float32)}
+        c0 = c
+    flat = cfg.channels[-1] * (IMG // 8) * (IMG // 8)
+    params["fc0"] = {
+        "w": jax.random.normal(ks[3], (flat, cfg.fc_width), jnp.float32)
+        * math.sqrt(2.0 / flat),
+        "b": jnp.zeros((cfg.fc_width,), jnp.float32)}
+    params["fc1"] = {
+        "w": jax.random.normal(ks[4], (cfg.fc_width, cfg.n_classes),
+                               jnp.float32) * math.sqrt(2.0 / cfg.fc_width),
+        "b": jnp.zeros((cfg.n_classes,), jnp.float32)}
+    return params
+
+
+def cnn_forward(params, x, cfg: CNNConfig = CNNConfig()):
+    """x: (B, 32, 32, 3) -> logits (B, n_classes)."""
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+        x = jax.nn.relu(x)
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc0"]["w"] + params["fc0"]["b"])
+    return x @ params["fc1"]["w"] + params["fc1"]["b"]
+
+
+def cnn_loss(params, batch, cfg: CNNConfig = CNNConfig()):
+    logits = cnn_forward(params, batch["image"], cfg)
+    onehot = jax.nn.one_hot(batch["label"], cfg.n_classes)
+    loss = -jnp.mean(jnp.sum(onehot * jax.nn.log_softmax(logits), axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(
+        jnp.float32))
+    return loss, acc
+
+
+def synthetic_signs(seed: int, n: int) -> Dict[str, np.ndarray]:
+    """Class-conditional structured patterns (learnable stand-in for GTSRB)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, N_CLASSES, n)
+    proto_rng = np.random.default_rng(1234)
+    protos = proto_rng.normal(0, 1, (N_CLASSES, IMG, IMG, 3)).astype(
+        np.float32)
+    # low-frequency class structure: blur prototypes along both axes, then
+    # renormalize so the class signal survives the additive noise
+    for _ in range(3):
+        protos = (protos + np.roll(protos, 1, 1) + np.roll(protos, 1, 2)) / 3
+    protos /= protos.std(axis=(1, 2, 3), keepdims=True)
+    imgs = protos[labels] + rng.normal(0, 0.5, (n, IMG, IMG, 3)).astype(
+        np.float32)
+    return {"image": imgs.astype(np.float32), "label": labels.astype(
+        np.int32)}
+
+
+def train_cnn(assignment: Dict, steps: int = 60, batch: int = 64,
+              seed: int = 0, report=None) -> float:
+    """Train with the given hyperparameters, return validation accuracy —
+    the trial function for examples/hpo_cnn.py."""
+    cfg = CNNConfig(fc_width=int(assignment.get("fc_width", 128)))
+    lr = float(assignment.get("lr", 1e-3))
+    momentum = float(assignment.get("momentum", 0.9))
+    params = init_cnn(jax.random.key(seed), cfg)
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(params, vel, batch_):
+        (loss, acc), g = jax.value_and_grad(
+            functools.partial(cnn_loss, cfg=cfg), has_aux=True)(
+                params, batch_)
+        vel = jax.tree.map(lambda v, gg: momentum * v - lr * gg, vel, g)
+        params = jax.tree.map(jnp.add, params, vel)
+        return params, vel, loss, acc
+
+    val = synthetic_signs(9999, 256)
+    val = jax.tree.map(jnp.asarray, val)
+    for t in range(steps):
+        data = jax.tree.map(jnp.asarray, synthetic_signs(seed * 10_000 + t,
+                                                         batch))
+        params, vel, loss, acc = step(params, vel, data)
+        if report is not None and t % 10 == 9:
+            _, va = cnn_loss(params, val, cfg)
+            report(t, float(va))
+    _, vacc = cnn_loss(params, val, cfg)
+    return float(vacc)

@@ -1,0 +1,142 @@
+"""Shared primitive layers: norms, dense, RoPE, MLPs, embeddings.
+
+Parameters are plain nested dicts of jnp arrays (pytree-native: vmap-able for
+population training, trivially shardable for pjit).  Every init function is
+usable under ``jax.eval_shape`` so the dry-run never allocates.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, cfg, *, scale: Optional[float] = None,
+               bias: Optional[bool] = None) -> Params:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), cfg.store_dtype) * scale)}
+    if cfg.use_bias if bias is None else bias:
+        p["b"] = jnp.zeros((d_out,), cfg.store_dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    dtype = dtype or x.dtype
+    y = jnp.einsum("...i,io->...o", x, p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return constrain(y)  # anchor to batch/seq sharding (no-op off-mesh)
+
+
+def init_norm(d: int, cfg, kind: Optional[str] = None) -> Params:
+    kind = kind or cfg.norm
+    p = {"scale": jnp.ones((d,), cfg.store_dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.store_dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """RMSNorm or LayerNorm (decided by presence of a bias), f32 statistics."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if "bias" in p:  # LayerNorm
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:            # RMSNorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                       # (dim/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, dim/2)
+    sin = jnp.sin(angles)[..., :, None, :]               # (..., S, 1, dim/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "gate": init_dense(k1, d_model, d_ff, cfg),
+            "up": init_dense(k2, d_model, d_ff, cfg),
+            "down": init_dense(k3, d_ff, d_model, cfg),
+        }
+    return {
+        "up": init_dense(k1, d_model, d_ff, cfg),
+        "down": init_dense(k2, d_ff, d_model, cfg),
+    }
+
+
+def mlp(p: Params, x: jnp.ndarray, cfg) -> jnp.ndarray:
+    if "gate" in p:
+        act = jax.nn.gelu if cfg.act == "geglu" else jax.nn.silu
+        return dense(p["down"], act(dense(p["gate"], x)) * dense(p["up"], x))
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d_model: int, cfg) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d_model), cfg.store_dtype) * 0.02}
+
+
+def embed(p: Params, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray, *, softcap: float = 0.0) -> jnp.ndarray:
+    logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    return jnp.tanh(x / cap) * cap if cap else x
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token cross entropy in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    valid = labels >= 0
+    if mask is not None:
+        valid = jnp.logical_and(valid, mask > 0)
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

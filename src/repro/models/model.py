@@ -1,0 +1,518 @@
+"""Unified LM covering all ten assigned architectures.
+
+One class, five families:
+  dense / moe     decoder-only transformer (GQA or MLA attention, MLP or MoE FFN)
+  hybrid          Griffin-style (RG-LRU, RG-LRU, local-attn) stacks
+  ssm             xLSTM (mLSTM / sLSTM) stacks
+  vlm             decoder LM consuming a precomputed patch-embedding prefix (stub)
+  encdec          whisper: stub-frame encoder + cross-attending decoder
+
+Layer stacks are organised into homogeneous *groups* and applied with
+``lax.scan`` so compiled HLO size is O(#groups), not O(#layers); parameter
+leaves carry a leading ``repeats`` dim per group.  The same structure is what
+makes population-vmap training (core/vmap_trials.py) cheap: one more leading
+dim, zero code changes here.
+
+API (all pure functions of pytrees — vmap/pjit compose freely):
+  init(rng) -> params
+  loss(params, batch) -> (scalar, metrics)         # train_step target
+  forward(params, batch) -> (logits, aux)
+  prefill(params, batch, cache_len) -> (cache, last_logits)
+  decode_step(params, cache, tokens) -> (logits, cache)
+  init_cache(batch_size, cache_len) -> cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+from repro.models.common import (ATTN, LOCAL_ATTN, MLSTM, RGLRU, SLSTM,
+                                 ModelConfig)
+
+Params = Dict[str, Any]
+
+XATTN = "xattn"  # whisper decoder layer (self + cross + mlp)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str          # attn | local | rglru | mlstm | slstm | xattn
+    ffn: str           # mlp | dense_mlp | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    pattern: Tuple[LayerSpec, ...]
+    repeats: int
+
+
+def build_groups(cfg: ModelConfig) -> Tuple[GroupSpec, ...]:
+    if cfg.family == "encdec":
+        return (GroupSpec((LayerSpec(XATTN, "mlp"),), cfg.n_layers),)
+    if cfg.moe:
+        out = []
+        if cfg.first_dense_layers:
+            out.append(GroupSpec((LayerSpec(ATTN, "dense_mlp"),),
+                                 cfg.first_dense_layers))
+        out.append(GroupSpec((LayerSpec(ATTN, "moe"),),
+                             cfg.n_layers - cfg.first_dense_layers))
+        return tuple(out)
+    groups = []
+    for pattern, reps in cfg.layer_groups():
+        specs = tuple(
+            LayerSpec(k, "none" if cfg.d_ff == 0 else "mlp") for k in pattern)
+        groups.append(GroupSpec(specs, reps))
+    return tuple(groups)
+
+
+# ==========================================================================
+# per-layer init
+# ==========================================================================
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": L.init_norm(cfg.d_model, cfg)}
+    if spec.kind in (ATTN, LOCAL_ATTN):
+        p["attn"] = A.init_attention(ks[0], cfg)
+    elif spec.kind == XATTN:
+        p["attn"] = A.init_attention(ks[0], cfg)
+        p["ln_x"] = L.init_norm(cfg.d_model, cfg)
+        p["cross"] = A.init_attention(ks[3], cfg, cross=True)
+    elif spec.kind == RGLRU:
+        p["rglru"] = R.init_rglru_block(ks[0], cfg)
+    elif spec.kind == MLSTM:
+        p["mlstm"] = R.init_mlstm_block(ks[0], cfg)
+    elif spec.kind == SLSTM:
+        p["slstm"] = R.init_slstm_block(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn != "none" and not cfg.parallel_block:
+        p["ln2"] = L.init_norm(cfg.d_model, cfg)
+    if spec.ffn == "mlp":
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg)
+    elif spec.ffn == "dense_mlp":
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model,
+                              cfg.dense_d_ff or cfg.d_ff, cfg)
+    elif spec.ffn == "moe":
+        p["ffn"] = M.init_moe(ks[2], cfg)
+    return p
+
+
+def _ffn_apply(spec: LayerSpec, p: Params, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if spec.ffn == "moe":
+        return M.moe_forward(p["ffn"], x, cfg)
+    return L.mlp(p["ffn"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ==========================================================================
+# per-layer forward / prefill / decode
+# ==========================================================================
+def _layer_fwd(spec: LayerSpec, p: Params, x, positions, cfg,
+               enc=None, enc_positions=None, collect_cache=False,
+               cache_len: int = 0):
+    """Returns (x, aux, cache_entry_or_{})."""
+    aux = jnp.zeros((), jnp.float32)
+    entry: Params = {}
+    eps = cfg.norm_eps
+    k = spec.kind
+    h = L.apply_norm(p["ln1"], x, eps)
+    window = cfg.window if k == LOCAL_ATTN else 0
+
+    if k in (ATTN, LOCAL_ATTN, XATTN):
+        if collect_cache:
+            att, kv = A.attn_forward(p["attn"], h, positions, cfg,
+                                     window=window, return_kv=True)
+            entry.update(_pad_kv(kv, cache_len, window, cfg))
+        else:
+            att = A.attn_forward(p["attn"], h, positions, cfg, window=window)
+        if cfg.parallel_block:                 # cohere: one norm, parallel
+            ff, aux = _ffn_apply(spec, p, h, cfg)
+            return x + att + ff, aux, entry
+        x = x + att
+        if k == XATTN:
+            hx = L.apply_norm(p["ln_x"], x, eps)
+            if collect_cache:
+                xa, ckv = A.attn_forward(
+                    p["cross"], hx, positions, cfg, kv_source=enc,
+                    kv_positions=enc_positions, return_kv=True)
+                entry["ck"], entry["cv"] = ckv["k"], ckv["v"]
+            else:
+                xa = A.attn_forward(p["cross"], hx, positions, cfg,
+                                    kv_source=enc, kv_positions=enc_positions)
+            x = x + xa
+    elif k == RGLRU:
+        if collect_cache:
+            y, c = R.rglru_forward(p["rglru"], h, cfg, return_cache=True)
+            entry.update(c)
+        else:
+            y = R.rglru_forward(p["rglru"], h, cfg)
+        x = x + y
+    elif k == MLSTM:
+        if collect_cache:
+            y, c = R.mlstm_forward(p["mlstm"], h, cfg, return_cache=True)
+            entry.update(c)
+        else:
+            y = R.mlstm_forward(p["mlstm"], h, cfg)
+        return x + y, aux, entry
+    elif k == SLSTM:
+        if collect_cache:
+            y, c = R.slstm_forward(p["slstm"], h, cfg, return_cache=True)
+            entry.update(c)
+        else:
+            y = R.slstm_forward(p["slstm"], h, cfg)
+        return x + y, aux, entry
+
+    if spec.ffn != "none":
+        ff, aux = _ffn_apply(spec, p, L.apply_norm(p["ln2"], x, eps), cfg)
+        x = x + ff
+    return x, aux, entry
+
+
+def _pad_kv(kv: Params, cache_len: int, window: int, cfg) -> Params:
+    """Fit prefill K/V into the fixed cache buffer (ring-layout for local)."""
+    out = {}
+    S = next(iter(kv.values())).shape[1]
+    buf_len = min(cache_len, window) if window else cache_len
+    for name, v in kv.items():
+        if window:
+            # keep the last `buf_len` entries, placed at slot pos % buf_len
+            tail = v[:, -buf_len:] if S >= buf_len else v
+            keep = tail.shape[1]
+            start = (S - keep) % buf_len
+            rolled = jnp.roll(
+                jnp.pad(tail, ((0, 0), (0, buf_len - keep)) +
+                        ((0, 0),) * (v.ndim - 2)), start, axis=1)
+            out[name] = rolled.astype(cfg.compute_dtype)
+        else:
+            pad = cache_len - S
+            out[name] = jnp.pad(v, ((0, 0), (0, pad)) +
+                                ((0, 0),) * (v.ndim - 2)
+                                ).astype(cfg.compute_dtype)
+    return out
+
+
+def _layer_decode(spec: LayerSpec, p: Params, x, cache: Params, pos, cfg):
+    """x: (B,1,d); returns (x, new_cache_entry)."""
+    eps = cfg.norm_eps
+    k = spec.kind
+    h = L.apply_norm(p["ln1"], x, eps)
+    window = cfg.window if k == LOCAL_ATTN else 0
+    if k in (ATTN, LOCAL_ATTN, XATTN):
+        self_cache = {n: cache[n] for n in cache if n not in ("ck", "cv")}
+        att, new_self = A.attn_decode(p["attn"], h, self_cache, pos, cfg,
+                                      window=window)
+        if cfg.parallel_block:
+            ff, _ = _ffn_apply(spec, p, h, cfg)
+            new = dict(new_self)
+            return x + att + ff, new
+        x = x + att
+        new = dict(new_self)
+        if k == XATTN:
+            hx = L.apply_norm(p["ln_x"], x, eps)
+            B = x.shape[0]
+            S_enc = cache["ck"].shape[1]
+            q = A.dense3(p["cross"]["wq"], hx, cfg.n_heads, cfg.hd)[:, 0]
+            stats = A.decode_attend_chunk(
+                q, cache["ck"], cache["cv"], jnp.full((B,), 1 << 30),
+                jnp.broadcast_to(jnp.arange(S_enc)[None], (B, S_enc)),
+                scale=1.0 / math.sqrt(cfg.hd))
+            out = A.combine_decode([stats]).astype(x.dtype)
+            xa = L.dense(p["cross"]["wo"], out.reshape(B, -1))[:, None]
+            x = x + xa
+            new["ck"], new["cv"] = cache["ck"], cache["cv"]
+    elif k == RGLRU:
+        y, new = R.rglru_decode(p["rglru"], h, cache, cfg)
+        x = x + y
+    elif k == MLSTM:
+        y, new = R.mlstm_decode(p["mlstm"], h, cache, cfg)
+        return x + y, new
+    elif k == SLSTM:
+        y, new = R.slstm_decode(p["slstm"], h, cache, cfg)
+        return x + y, new
+    else:
+        raise ValueError(k)
+    if spec.ffn != "none" and not cfg.parallel_block:
+        ff, _ = _ffn_apply(spec, p, L.apply_norm(p["ln2"], x, eps), cfg)
+        x = x + ff
+    return x, new
+
+
+def _init_cache_entry(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      cache_len: int, enc_len: int = 0) -> Params:
+    k = spec.kind
+    if k in (ATTN, XATTN):
+        e = A.init_cache_attn(cfg, batch, cache_len)
+        if k == XATTN:
+            e["ck"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd),
+                                cfg.compute_dtype)
+            e["cv"] = jnp.zeros_like(e["ck"])
+        return e
+    if k == LOCAL_ATTN:
+        return A.init_cache_attn(cfg, batch, cache_len, window=cfg.window)
+    if k == RGLRU:
+        return R.init_rglru_cache(cfg, batch)
+    if k == MLSTM:
+        return R.init_mlstm_cache(cfg, batch)
+    if k == SLSTM:
+        return R.init_slstm_cache(cfg, batch)
+    raise ValueError(k)
+
+
+# ==========================================================================
+# sinusoidal positions (whisper)
+# ==========================================================================
+def _sincos(positions: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ==========================================================================
+# the model
+# ==========================================================================
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = build_groups(cfg)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_emb, k_enc, k_out, k_g = jax.random.split(rng, 4)
+        params: Params = {
+            "embed": L.init_embedding(k_emb, cfg.vocab_size, cfg.d_model, cfg),
+            "final_norm": L.init_norm(cfg.d_model, cfg),
+            "groups": [],
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = L.init_embedding(
+                k_out, cfg.vocab_size, cfg.d_model, cfg)
+        gkeys = jax.random.split(k_g, len(self.groups))
+        for g, gk in zip(self.groups, gkeys):
+            pkeys = jax.random.split(gk, len(g.pattern))
+            gp = {}
+            for j, (spec, pk) in enumerate(zip(g.pattern, pkeys)):
+                rkeys = jax.random.split(pk, g.repeats)
+                gp[str(j)] = jax.vmap(
+                    lambda k_, s=spec: _init_layer(k_, s, cfg))(rkeys)
+            params["groups"].append(gp)
+        if cfg.family == "encdec":
+            params["encoder"] = self._init_encoder(k_enc)
+        return params
+
+    def _init_encoder(self, key) -> Params:
+        cfg = self.cfg
+        n = cfg.encoder_layers
+        k_l, k_n = jax.random.split(key)
+        spec = LayerSpec(ATTN, "mlp")
+        rkeys = jax.random.split(k_l, n)
+        return {
+            "layers": jax.vmap(lambda k_: _init_layer(k_, spec, cfg))(rkeys),
+            "norm": L.init_norm(cfg.d_model, cfg),
+        }
+
+    def param_shapes(self, deduped: bool = False) -> Params:
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ------------------------------------------------------------ helpers
+    def _maybe_remat(self, fn):
+        cfg = self.cfg
+        if cfg.remat == "none":
+            return fn
+        if cfg.remat == "dots":      # save matmul outputs, recompute the rest
+            pol = getattr(jax.checkpoint_policies, "dots_saveable", None)
+            return jax.checkpoint(fn, policy=pol)
+        return jax.checkpoint(fn)    # full: save only layer boundaries
+
+    def _run_stack(self, params, x, positions, *, enc=None, enc_positions=None,
+                   mode="train", cache=None, pos=None, cache_len=0):
+        """Apply every group; returns (x, aux, new_cache_groups)."""
+        cfg = self.cfg
+        aux0 = jnp.zeros((), jnp.float32)
+        new_groups: List[Params] = []
+        for gi, g in enumerate(self.groups):
+            gp = params["groups"][gi]
+            gc = cache[gi] if cache is not None else None
+
+            if mode == "decode":
+                def step(carry, xs, _g=g):
+                    xx = carry
+                    lp, lc = xs
+                    nc = {}
+                    for j, spec in enumerate(_g.pattern):
+                        xx, nce = _layer_decode(spec, lp[str(j)], xx,
+                                                lc[str(j)], pos, cfg)
+                        nc[str(j)] = nce
+                    return constrain(xx), nc
+                if cfg.scan_layers:
+                    x, nc = jax.lax.scan(step, x, (gp, gc))
+                else:
+                    ncl = []
+                    for r in range(g.repeats):
+                        x, e = step(x, jax.tree.map(lambda a: a[r], (gp, gc)))
+                        ncl.append(e)
+                    nc = jax.tree.map(lambda *xs: jnp.stack(xs), *ncl)
+                new_groups.append(nc)
+                continue
+
+            collect = mode == "prefill"
+
+            def step(carry, lp, _g=g, _collect=collect):
+                xx, aux = carry
+                nc = {}
+                for j, spec in enumerate(_g.pattern):
+                    xx, a, e = _layer_fwd(
+                        spec, lp[str(j)], xx, positions, cfg, enc=enc,
+                        enc_positions=enc_positions, collect_cache=_collect,
+                        cache_len=cache_len)
+                    aux = aux + a
+                    if _collect:
+                        nc[str(j)] = e
+                return (constrain(xx), aux), nc
+
+            if cfg.scan_layers:
+                fn = self._maybe_remat(step) if mode == "train" else step
+                (x, aux0), nc = jax.lax.scan(fn, (x, aux0), gp)
+            else:
+                ncl = []
+                for r in range(g.repeats):
+                    (x, aux0), e = step((x, aux0),
+                                        jax.tree.map(lambda a: a[r], gp))
+                    ncl.append(e)
+                nc = (jax.tree.map(lambda *xs: jnp.stack(xs), *ncl)
+                      if collect else {})
+            new_groups.append(nc)
+        return x, aux0, new_groups
+
+    def _embed_in(self, params, tokens):
+        cfg = self.cfg
+        x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+        if cfg.scale_embed:
+            x = x * math.sqrt(cfg.d_model)
+        return constrain(x)
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        table = params["embed" if cfg.tie_embeddings else "unembed"]
+        x = L.apply_norm(params["final_norm"], x, cfg.norm_eps)
+        return constrain(L.unembed(table, x, softcap=cfg.logit_softcap))
+
+    def encode(self, params, frames):
+        """Whisper encoder over precomputed (stub) frame embeddings."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        S = frames.shape[1]
+        pos = jnp.arange(S)
+        x = frames.astype(cfg.compute_dtype) + _sincos(pos, cfg.d_model,
+                                                       cfg.compute_dtype)
+        spec = LayerSpec(ATTN, "mlp")
+
+        def step(xx, lp):
+            h = L.apply_norm(lp["ln1"], xx, cfg.norm_eps)
+            att = A.attn_forward(lp["attn"], h, pos, cfg, causal=False)
+            xx = xx + att
+            ff, _ = _ffn_apply(spec, lp, L.apply_norm(lp["ln2"], xx,
+                                                      cfg.norm_eps), cfg)
+            return xx + ff, {}
+
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(self._maybe_remat(step), x, enc["layers"])
+        else:
+            for r in range(cfg.encoder_layers):
+                x, _ = step(x, jax.tree.map(lambda a: a[r], enc["layers"]))
+        return L.apply_norm(enc["norm"], x, cfg.norm_eps)
+
+    # ------------------------------------------------------------ forward
+    def forward(self, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """-> (logits over *text* positions, moe aux loss)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_in(params, tokens)
+        enc = enc_positions = None
+        n_prefix = 0
+        if cfg.family == "vlm":
+            img = batch["img_embeds"].astype(cfg.compute_dtype)
+            n_prefix = img.shape[1]
+            x = jnp.concatenate([img, x], axis=1)
+        elif cfg.family == "encdec":
+            enc = self.encode(params, batch["frames"])
+            enc_positions = jnp.arange(enc.shape[1])
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        if cfg.pos_kind == "sincos":
+            x = x + _sincos(positions, cfg.d_model, x.dtype)
+        x, aux, _ = self._run_stack(params, x, positions, enc=enc,
+                                    enc_positions=enc_positions, mode="train")
+        if n_prefix:
+            x = x[:, n_prefix:]
+        return self._unembed(params, x), aux
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux = self.forward(params, batch)
+        ce = L.cross_entropy(logits, batch["labels"])
+        total = ce + self.cfg.router_aux_weight * aux
+        return total, {"ce": ce, "aux": aux,
+                       "tokens": jnp.sum(batch["labels"] >= 0)}
+
+    # ------------------------------------------------------------ serving
+    def init_cache(self, batch: int, cache_len: int, enc_len: int = 0):
+        caches = []
+        for g in self.groups:
+            gc = {}
+            for j, spec in enumerate(g.pattern):
+                one = _init_cache_entry(spec, self.cfg, batch, cache_len,
+                                        enc_len)
+                gc[str(j)] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (g.repeats,) + a.shape), one)
+            caches.append(gc)
+        return {"layers": caches,
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, batch, cache_len: int):
+        """Run the full prompt, build a decode cache sized `cache_len`."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed_in(params, tokens)
+        enc = enc_positions = None
+        n_prefix = 0
+        if cfg.family == "vlm":
+            img = batch["img_embeds"].astype(cfg.compute_dtype)
+            n_prefix = img.shape[1]
+            x = jnp.concatenate([img, x], axis=1)
+        elif cfg.family == "encdec":
+            enc = self.encode(params, batch["frames"])
+            enc_positions = jnp.arange(enc.shape[1])
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        if cfg.pos_kind == "sincos":
+            x = x + _sincos(positions, cfg.d_model, x.dtype)
+        x, _, layer_caches = self._run_stack(
+            params, x, positions, enc=enc, enc_positions=enc_positions,
+            mode="prefill", cache_len=cache_len)
+        logits = self._unembed(params, x[:, -1:])[:, 0]
+        cache = {"layers": layer_caches,
+                 "pos": jnp.full((tokens.shape[0],), S, jnp.int32)}
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B,) int32 -> (logits (B,V), new cache)."""
+        cfg = self.cfg
+        pos = cache["pos"]
+        x = self._embed_in(params, tokens[:, None])
+        if cfg.pos_kind == "sincos":
+            x = x + _sincos(pos[:, None], cfg.d_model, x.dtype)
+        x, _, new_layers = self._run_stack(
+            params, x, None, mode="decode", cache=cache["layers"], pos=pos)
+        logits = self._unembed(params, x[:, 0])
+        return logits, {"layers": new_layers, "pos": pos + 1}

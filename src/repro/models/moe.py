@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: top-k routing with per-sequence capacity.
+
+TPU-native choices
+------------------
+* Routing/dispatch math is *per sequence* (cumsum along the sequence axis
+  only), so a batch sharded over mesh axes needs **zero** cross-device
+  communication for dispatch — XLA shards the whole block cleanly over the
+  batch dim.  Expert parallelism (experts sharded over 'model' with
+  all_to_all dispatch) is provided separately in ``distributed/ep.py`` as the
+  hillclimb variant.
+* Dispatch uses scatter-with-drop into a static (B, E, C, d) buffer — static
+  shapes throughout (no ragged ops), capacity C = ceil(S*k/E * cf).
+* Decode (S == 1) uses a dense masked combine over experts: with one token
+  per device the cost is dominated by reading expert weights from HBM either
+  way, and this keeps the step a single einsum.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain_at
+from repro.models import layers as L
+from repro.models.common import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, E), cfg.store_dtype) * scale},
+        "gate": jax.random.normal(ks[1], (E, d, f), cfg.store_dtype) * scale,
+        "up": jax.random.normal(ks[2], (E, d, f), cfg.store_dtype) * scale,
+        "down": jax.random.normal(ks[3], (E, f, d), cfg.store_dtype) / math.sqrt(f),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, cfg.n_shared_experts * f, cfg)
+    return p
+
+
+def _router(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    """Returns (weights (B,S,k), idx (B,S,k), aux_loss scalar)."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]["w"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss, computed per sequence then averaged.
+    E = cfg.n_experts
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)          # (B,S,k,E)
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=1)            # (B,E)
+    pmean = jnp.mean(probs, axis=1)                             # (B,E)
+    aux = E * jnp.mean(jnp.sum(frac * pmean, axis=-1))
+    return w.astype(x.dtype), idx, aux
+
+
+def capacity(cfg: ModelConfig, seq: int) -> int:
+    c = math.ceil(seq * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, min(seq, int(c)))
+
+
+def moe_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    # Routing (cumsum over S) and dispatch must be sequence-LOCAL: under
+    # meshes that shard the sequence axis (multi-pod train/prefill), gather
+    # S once here (one reshard in, one out at the layer anchor) instead of
+    # letting every routing op cross shards (§Perf multi-pod note:
+    # 13.9 -> ~1 s collective on granite-moe 2x16x16).
+    x = constrain_at(x, 0)
+    w, idx, aux = _router(p, x, cfg)
+    if S == 1:
+        return _moe_decode(p, x, w, idx, cfg), aux
+
+    C = capacity(cfg, S)
+    # position of each (token, choice) within its expert, per sequence
+    flat_e = idx.reshape(B, S * k)                              # (B,Sk)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (B,Sk,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                        # (B,Sk,E)
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]
+    keep = pos < C
+    dest = jnp.where(keep, flat_e * C + pos, E * C)             # drop slot
+
+    # dispatch: (B, E*C, d) buffer, out-of-range scatters dropped.
+    # The batch anchors are load-bearing: without them XLA's scatter
+    # partitioner replicates the (B,E,C,d) buffer over the batch axes and
+    # all-reduces it per layer (measured: 50%+ of train ICI traffic on the
+    # MoE archs — see EXPERIMENTS.md §Perf iteration 1).
+    xk = constrain_at(jnp.repeat(x, k, axis=1), 0)              # (B,Sk,d)
+    dest = constrain_at(dest, 0)
+    buf = constrain_at(jnp.zeros((B, E * C, d), x.dtype), 0)
+    buf = jax.vmap(lambda b, dst, v: b.at[dst].add(v, mode="drop"))(
+        buf, dest, xk)
+    h = constrain_at(buf, 0).reshape(B, E, C, d)
+
+    # expert MLPs (SwiGLU), batched einsum over experts
+    g = jnp.einsum("becd,edf->becf", h, p["gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", h, p["up"].astype(x.dtype))
+    o = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u,
+                   p["down"].astype(x.dtype))
+    o = o.reshape(B, E * C, d)
+
+    # combine: gather back (dropped -> 0) and weight
+    o = constrain_at(o, 0)
+    gathered = constrain_at(jax.vmap(lambda ob, dst: ob.at[dst].get(
+        mode="fill", fill_value=0))(o, dest), 0)                # (B,Sk,d)
+    y = jnp.sum((gathered * w.reshape(B, S * k)[..., None]
+                 ).reshape(B, S, k, d), axis=2)
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], x, cfg)
+    return y, aux
+
+
+def _moe_decode(p: Params, x: jnp.ndarray, w, idx, cfg: ModelConfig):
+    """Dense masked combine for single-token steps (memory-bound regime)."""
+    B, S, d = x.shape
+    E = cfg.n_experts
+    mask = jnp.sum(jax.nn.one_hot(idx, E, dtype=x.dtype) * w[..., None],
+                   axis=2)                                      # (B,S,E)
+    g = jnp.einsum("bsd,edf->bsef", x, p["gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,edf->bsef", x, p["up"].astype(x.dtype))
+    o = jnp.einsum("bsef,efd->bsed", jax.nn.silu(g) * u,
+                   p["down"].astype(x.dtype))
+    y = jnp.einsum("bsed,bse->bsd", o, mask)
+    if "shared" in p:
+        y = y + L.mlp(p["shared"], x, cfg)
+    return y

@@ -1,0 +1,388 @@
+"""Recurrent temporal-mixing blocks: RG-LRU (Griffin/RecurrentGemma) and
+xLSTM's mLSTM / sLSTM cells.
+
+* RG-LRU trains with a parallel ``associative_scan`` (O(S log S) depth) and
+  decodes with an O(1) state update — the reason recurrentgemma runs the
+  long_500k cell.
+* mLSTM uses a **stabilized chunkwise-recurrent** formulation (parallel
+  D-matrix inside a chunk, exact recurrent state carry across chunks) — the
+  same scheme production linear-attention kernels use; both train and prefill
+  share it, decode is the O(1) recurrent step.
+* sLSTM has a true hidden-to-hidden recurrence (block-diagonal per head) and
+  therefore trains with ``lax.scan`` over time, exactly as the paper defines.
+
+Deviations from the sources (recorded in DESIGN.md): RG-LRU gates are dense
+rather than block-diagonal; sLSTM omits its causal conv.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain_at
+from repro.models import layers as L
+from repro.models.common import ModelConfig
+
+Params = Dict[str, jnp.ndarray]
+_RGLRU_C = 8.0
+_MLSTM_CHUNK = 256
+
+
+# ==========================================================================
+# temporal causal conv (depthwise)
+# ==========================================================================
+def init_conv(key, width: int, channels: int, cfg) -> Params:
+    return {"w": jax.random.normal(key, (width, channels), cfg.store_dtype) * 0.1,
+            "b": jnp.zeros((channels,), cfg.store_dtype)}
+
+
+def causal_conv(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B,S,C); width-W depthwise causal conv as W shifted adds."""
+    W = p["w"].shape[0]
+    w = p["w"].astype(x.dtype)
+    y = x * w[W - 1]
+    for j in range(W - 1):
+        shift = W - 1 - j
+        y = y + jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] * w[j]
+    return y + p["b"].astype(x.dtype)
+
+
+def conv_decode(p: Params, x1: jnp.ndarray, buf: jnp.ndarray):
+    """x1: (B,C) new input; buf: (B,W-1,C) previous inputs (oldest first)."""
+    W = p["w"].shape[0]
+    w = p["w"].astype(x1.dtype)
+    hist = jnp.concatenate([buf, x1[:, None]], axis=1)          # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", hist, w) + p["b"].astype(x1.dtype)
+    return y, hist[:, 1:]
+
+
+# ==========================================================================
+# RG-LRU (Griffin recurrent block: two branches, conv, gated LRU)
+# ==========================================================================
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    d, r = cfg.d_model, cfg.d_rnn
+    ks = jax.random.split(key, 7)
+    # Λ init so a = exp(-c softplus(Λ)) is in (0.9, 0.999)
+    u = jax.random.uniform(ks[5], (r,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / _RGLRU_C) - 1.0)        # inv softplus
+    return {
+        "in_x": L.init_dense(ks[0], d, r, cfg),
+        "in_gate": L.init_dense(ks[1], d, r, cfg),
+        "conv": init_conv(ks[2], cfg.conv_width, r, cfg),
+        "w_a": L.init_dense(ks[3], r, r, cfg),
+        "w_i": L.init_dense(ks[4], r, r, cfg),
+        "lam": lam.astype(cfg.store_dtype),
+        "out": L.init_dense(ks[6], r, d, cfg),
+    }
+
+
+def _rglru_coeffs(p, xr):
+    """xr: (...,r) conv output -> log_a, b (both f32)."""
+    x32 = xr.astype(jnp.float32)
+    a_gate = jax.nn.sigmoid(L.dense(p["w_a"], x32, dtype=jnp.float32))
+    i_gate = jax.nn.sigmoid(L.dense(p["w_i"], x32, dtype=jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * a_gate
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i_gate * x32)
+    return log_a, b
+
+
+def rglru_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_cache: bool = False):
+    """Training/prefill pass. x: (B,S,d)."""
+    gate = jax.nn.gelu(L.dense(p["in_gate"], x))
+    xr = causal_conv(p["conv"], L.dense(p["in_x"], x))
+    log_a, b = _rglru_coeffs(p, xr)
+
+    def op(c1, c2):
+        (la1, h1), (la2, h2) = c1, c2
+        return la1 + la2, h1 * jnp.exp(la2) + h2
+
+    _, h = jax.lax.associative_scan(op, (log_a, b), axis=1)
+    y = L.dense(p["out"], (h.astype(x.dtype) * gate))
+    if return_cache:
+        W = cfg.conv_width
+        pre = L.dense(p["in_x"], x[:, -(W - 1):])
+        pad = W - 1 - pre.shape[1]
+        if pad:
+            pre = jnp.pad(pre, ((0, 0), (pad, 0), (0, 0)))
+        return y, {"h": h[:, -1].astype(jnp.float32), "conv": pre}
+    return y
+
+
+def rglru_decode(p: Params, x: jnp.ndarray, cache: Dict, cfg: ModelConfig):
+    """x: (B,1,d) -> (y, new_cache); O(1) per step."""
+    x1 = x[:, 0]
+    gate = jax.nn.gelu(L.dense(p["in_gate"], x1))
+    xr_raw = L.dense(p["in_x"], x1)
+    xr, conv_buf = conv_decode(p["conv"], xr_raw, cache["conv"])
+    log_a, b = _rglru_coeffs(p, xr)
+    h = cache["h"] * jnp.exp(log_a) + b
+    y = L.dense(p["out"], h.astype(x.dtype) * gate)
+    return y[:, None], {"h": h, "conv": conv_buf}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int) -> Dict:
+    return {"h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn),
+                              cfg.compute_dtype)}
+
+
+# ==========================================================================
+# mLSTM (xLSTM matrix memory) — stabilized chunkwise recurrent
+# ==========================================================================
+def init_mlstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.d_rnn or 2 * d                 # inner width (pf=2)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "up_m": L.init_dense(ks[0], d, di, cfg),
+        "up_g": L.init_dense(ks[1], d, di, cfg),
+        "conv": init_conv(ks[2], cfg.conv_width, di, cfg),
+        "wq": L.init_dense(ks[3], di, di, cfg),
+        "wk": L.init_dense(ks[4], di, di, cfg),
+        "wv": L.init_dense(ks[5], di, di, cfg),
+        "w_if": L.init_dense(ks[6], di, 2 * H, cfg, bias=True),
+        "skip": jnp.ones((di,), cfg.store_dtype),
+        "down": L.init_dense(ks[7], di, d, cfg),
+    }
+
+
+def _mlstm_qkvif(p, x, cfg):
+    di = p["up_m"]["w"].shape[1]
+    H = cfg.n_heads
+    xm = L.dense(p["up_m"], x)
+    gate = jax.nn.silu(L.dense(p["up_g"], x))
+    xc = jax.nn.silu(causal_conv(p["conv"], xm))
+    B, S = x.shape[:2]
+    q = L.dense(p["wq"], xc).reshape(B, S, H, -1)
+    k = L.dense(p["wk"], xc).reshape(B, S, H, -1)
+    v = L.dense(p["wv"], xm).reshape(B, S, H, -1)
+    i_f = L.dense(p["w_if"], xc, dtype=jnp.float32)
+    i_t, f_t = jnp.split(i_f, 2, axis=-1)                       # (B,S,H)
+    log_f = jax.nn.log_sigmoid(f_t + 1.0)
+    return q, k, v, i_t, log_f, gate, xc
+
+
+def _mlstm_chunk(carry, inp, scale):
+    """One chunk of stabilized chunkwise mLSTM.  All f32.
+    carry: (C (B,H,D,D), n (B,H,D), m (B,H)); inp: q,k,v,(B,L,H,D) i,lf (B,L,H)."""
+    C_in, n_in, m_in = carry
+    q, k, v, i_t, lf = inp
+    B, Lc, H, D = q.shape
+    cums = jnp.cumsum(lf, axis=1)                               # (B,L,H)
+    total = cums[:, -1]                                         # (B,H)
+    # intra-chunk log weights D~[t,s] = cums_t - cums_s + i_s (s<=t)
+    dt = (cums[:, :, None] - cums[:, None, :, :]
+          + i_t[:, None, :, :])                                 # (B,t,s,H)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    dt = jnp.where(tri[None, :, :, None], dt, -jnp.inf)
+    m_intra = jnp.max(dt, axis=2)                               # (B,t,H)
+    m_t = jnp.maximum(m_intra, m_in[:, None] + cums)            # (B,t,H)
+    m_t = jnp.maximum(m_t, -60.0)                               # floor
+    w_intra = jnp.exp(dt - m_t[:, :, None])                     # (B,t,s,H)
+    w_inter = jnp.exp(cums + m_in[:, None] - m_t)               # (B,t,H)
+
+    qs = q * scale
+    s_qk = jnp.einsum("bthd,bshd->btsh", qs, k)                 # (B,t,s,H)
+    num = (jnp.einsum("btsh,bshd->bthd", s_qk * w_intra, v)
+           + jnp.einsum("bthd,bhde->bthe", qs, C_in) * w_inter[..., None])
+    den = (jnp.einsum("btsh,btsh->bth", s_qk, w_intra)
+           + jnp.einsum("bthd,bhd->bth", qs, n_in) * w_inter)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # state carry to the next chunk
+    m_out = jnp.maximum(m_in + total,
+                        jnp.max(total[:, None] - cums + i_t, axis=1))
+    m_out = jnp.maximum(m_out, -60.0)
+    w_st = jnp.exp(total[:, None] - cums + i_t - m_out[:, None])  # (B,s,H)
+    C_out = (C_in * jnp.exp(m_in + total - m_out)[..., None, None]
+             + jnp.einsum("bshd,bshe,bsh->bhde", k, v, w_st))
+    n_out = (n_in * jnp.exp(m_in + total - m_out)[..., None]
+             + jnp.einsum("bshd,bsh->bhd", k, w_st))
+    return (C_out, n_out, m_out), h
+
+
+def mlstm_cell(q, k, v, i_t, log_f, state, chunk: int = _MLSTM_CHUNK):
+    """Full-sequence stabilized mLSTM. Returns (h (B,S,H,D), final state)."""
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    f32 = lambda a: a.astype(jnp.float32)
+    q, k, v = f32(q), f32(k), f32(v)
+    if state is None:
+        state = (jnp.zeros((B, H, D, D), jnp.float32),
+                 jnp.zeros((B, H, D), jnp.float32),
+                 jnp.full((B, H), -60.0, jnp.float32))
+    state = tuple(constrain_at(s, 0) for s in state)
+    Lc = min(chunk, S)
+    n_chunks = math.ceil(S / Lc)
+    pad = n_chunks * Lc - S
+    def pad_t(a, fill=0.0):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2),
+                       constant_values=fill) if pad else a
+    # padded steps get log_f=0, i=-inf(-1e9): they don't alter the state
+    qp, kp, vp = pad_t(q), pad_t(k), pad_t(v)
+    ip, lfp = pad_t(i_t, -1e9), pad_t(log_f, 0.0)
+    resh = lambda a: constrain_at(
+        a.reshape(B, n_chunks, Lc, *a.shape[2:]).swapaxes(0, 1), 1)
+    xs = tuple(resh(a) for a in (qp, kp, vp, ip, lfp))
+    state, hs = jax.lax.scan(lambda c, i: _mlstm_chunk(c, i, scale), state, xs)
+    h = hs.swapaxes(0, 1).reshape(B, n_chunks * Lc, H, D)[:, :S]
+    return h, state
+
+
+def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_cache: bool = False):
+    q, k, v, i_t, log_f, gate, xc = _mlstm_qkvif(p, x, cfg)
+    h, state = mlstm_cell(q, k, v, i_t, log_f, None)
+    h = h.reshape(*x.shape[:2], -1).astype(x.dtype)
+    h = h + xc * p["skip"].astype(x.dtype)
+    y = L.dense(p["down"], h * gate)
+    if return_cache:
+        W = cfg.conv_width
+        xm = L.dense(p["up_m"], x[:, -(W - 1):])
+        pad = W - 1 - xm.shape[1]
+        if pad:
+            xm = jnp.pad(xm, ((0, 0), (pad, 0), (0, 0)))
+        return y, {"C": state[0], "n": state[1], "m": state[2], "conv": xm}
+    return y
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, cache: Dict, cfg: ModelConfig):
+    x1 = x[:, 0]
+    H = cfg.n_heads
+    xm = L.dense(p["up_m"], x1)
+    gate = jax.nn.silu(L.dense(p["up_g"], x1))
+    xc_raw, conv_buf = conv_decode(p["conv"], xm, cache["conv"])
+    xc = jax.nn.silu(xc_raw)
+    B = x1.shape[0]
+    q = L.dense(p["wq"], xc).reshape(B, H, -1).astype(jnp.float32)
+    k = L.dense(p["wk"], xc).reshape(B, H, -1).astype(jnp.float32)
+    v = L.dense(p["wv"], xm).reshape(B, H, -1).astype(jnp.float32)
+    i_f = L.dense(p["w_if"], xc, dtype=jnp.float32)
+    i_t, f_t = jnp.split(i_f, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t + 1.0)
+    D = q.shape[-1]
+    C_in, n_in, m_in = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(log_f + m_in, i_t)
+    fp = jnp.exp(log_f + m_in - m_new)[..., None]
+    ip = jnp.exp(i_t - m_new)[..., None]
+    C = C_in * fp[..., None] + ip[..., None] * k[..., :, None] * v[..., None, :]
+    n = n_in * fp + ip * k
+    qs = q / math.sqrt(D)
+    num = jnp.einsum("bhd,bhde->bhe", qs, C)
+    den = jnp.einsum("bhd,bhd->bh", qs, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, -1).astype(x.dtype) + xc * p["skip"].astype(x.dtype)
+    y = L.dense(p["down"], h * gate)
+    return y[:, None], {"C": C, "n": n, "m": m_new, "conv": conv_buf}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    di = cfg.d_rnn or 2 * cfg.d_model
+    H = cfg.n_heads
+    D = di // H
+    return {"C": jnp.zeros((batch, H, D, D), jnp.float32),
+            "n": jnp.zeros((batch, H, D), jnp.float32),
+            "m": jnp.full((batch, H), -60.0, jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, di),
+                              cfg.compute_dtype)}
+
+
+# ==========================================================================
+# sLSTM (xLSTM scalar memory; true recurrence -> lax.scan over time)
+# ==========================================================================
+def init_slstm_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    ffd = max(1, int(math.ceil(4 * d / 3 / 64)) * 64)   # pf 4/3, rounded
+    return {
+        "w_in": L.init_dense(ks[0], d, 4 * d, cfg, bias=True),
+        # block-diagonal recurrence, per head: (4, H, dh, dh)
+        "r": jax.random.normal(ks[1], (4, H, dh, dh), cfg.store_dtype)
+             / math.sqrt(dh),
+        "gn": jnp.ones((d,), cfg.store_dtype),
+        "ffn": L.init_mlp(ks[2], d, ffd, cfg),
+        "ffn_norm": L.init_norm(d, cfg),
+    }
+
+
+def _slstm_step(p, cfg, carry, zx):
+    """carry: (c,n,h,m) each (B,H,dh); zx: pre-activations (B,4d)."""
+    c, n, h, m = carry
+    B = zx.shape[0]
+    H = cfg.n_heads
+    dh = c.shape[-1]
+    r = p["r"].astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->gbhe", h, r)                    # (4,B,H,dh)
+    zi, zf, zz, zo = jnp.split(
+        zx.astype(jnp.float32).reshape(B, 4, H, dh).swapaxes(0, 1), 4, axis=0)
+    zi, zf, zz, zo = (zi[0] + rec[0], zf[0] + rec[1],
+                      zz[0] + rec[2], zo[0] + rec[3])
+    log_f = jax.nn.log_sigmoid(zf)
+    m_new = jnp.maximum(log_f + m, zi)
+    i_p = jnp.exp(zi - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    z = jnp.tanh(zz)
+    o = jax.nn.sigmoid(zo)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _group_norm(scale, x, eps):
+    # per-head group norm over the last dim, x: (B,S,d)->(B,S,H,dh) normed
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def slstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                  return_cache: bool = False):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    zx = L.dense(p["w_in"], x)                                  # (B,S,4d)
+    init = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(3)) + (
+        jnp.full((B, H, dh), -30.0, jnp.float32),)
+    init = tuple(constrain_at(s, 0) for s in init)
+    carry, hs = jax.lax.scan(
+        lambda c, z: _slstm_step(p, cfg, c, z), init,
+        constrain_at(zx.swapaxes(0, 1), 1))
+    h = hs.swapaxes(0, 1)                                       # (B,S,H,dh)
+    h = _group_norm(p["gn"], h, cfg.norm_eps).reshape(B, S, d)
+    y = (h * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    y = y + L.mlp(p["ffn"], L.apply_norm(p["ffn_norm"], y, cfg.norm_eps), cfg)
+    if return_cache:
+        c, n, hh, m = carry
+        return y, {"c": c, "n": n, "h": hh, "m": m}
+    return y
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, cache: Dict, cfg: ModelConfig):
+    B = x.shape[0]
+    d = x.shape[-1]
+    H = cfg.n_heads
+    zx = L.dense(p["w_in"], x[:, 0])
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, h = _slstm_step(p, cfg, carry, zx)
+    h = _group_norm(p["gn"], h[:, None], cfg.norm_eps).reshape(B, 1, d)
+    y = (h * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    y = y + L.mlp(p["ffn"], L.apply_norm(p["ffn_norm"], y, cfg.norm_eps), cfg)
+    c, n, hh, m = carry
+    return y, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, H, dh), -30.0, jnp.float32)}

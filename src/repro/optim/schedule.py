@@ -1,0 +1,21 @@
+"""Learning-rate schedules as pure functions of the step (traceable)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(peak, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, peak * w, cos(step - warmup))
+    return fn

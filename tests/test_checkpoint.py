@@ -1,0 +1,58 @@
+"""Checkpoint manager: roundtrip, atomicity, retention, resume."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _state(seed):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "groups": [{"0": jnp.arange(6.0)}]},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    st = _state(0)
+    mgr.save(10, st, {"loss": 1.5})
+    got, meta = mgr.restore(jax.tree.map(np.zeros_like, st))
+    assert meta["step"] == 10 and meta["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_write=False)
+    for s in (1, 5, 9):
+        mgr.save(s, _state(s))
+    assert mgr.latest_step() == 9
+    assert mgr.all_steps() == [5, 9]          # step 1 collected
+
+
+def test_async_write_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=True)
+    st = _state(3)
+    mgr.save(2, st)
+    mgr.wait()
+    got, meta = mgr.restore(jax.tree.map(np.zeros_like, st))
+    assert meta["step"] == 2
+
+
+def test_incomplete_tmp_dir_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_write=False)
+    mgr.save(4, _state(1))
+    (pathlib.Path(tmp_path) / ".tmp-9").mkdir()      # simulated crash
+    (pathlib.Path(tmp_path) / "step_00000009").mkdir()  # no state.npz
+    assert mgr.latest_step() == 4
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    p = pathlib.Path(tmp_path) / "x.npz"
+    save_pytree({"w": np.zeros((2, 2))}, p)
+    with pytest.raises(ValueError):
+        load_pytree({"w": np.zeros((3, 3))}, p)

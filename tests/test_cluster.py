@@ -1,0 +1,54 @@
+"""Cluster: pools, allocation, elasticity, failures."""
+import pytest
+
+from repro.core.cluster import Cluster, ClusterConfig, PoolConfig
+
+
+def _cluster():
+    return Cluster(ClusterConfig("c", pools=[
+        PoolConfig("cpu", "cpu", chips=8),
+        PoolConfig("tpu", "tpu", chips=16, min_chips=4, max_chips=32,
+                   chips_per_node=4)]))
+
+
+def test_allocate_release():
+    c = _cluster()
+    leases = [c.allocate("tpu", 4) for _ in range(4)]
+    assert all(l is not None for l in leases)
+    assert c.allocate("tpu", 4) is None            # full
+    c.release(leases[0])
+    assert c.allocate("tpu", 4) is not None
+
+
+def test_heterogeneous_pools_isolated():
+    c = _cluster()
+    assert c.allocate("cpu", 8) is not None
+    assert c.allocate("cpu", 1) is None
+    assert c.allocate("tpu", 8) is not None        # unaffected
+
+
+def test_unknown_pool_raises():
+    with pytest.raises(KeyError):
+        _cluster().allocate("gpu", 1)
+
+
+def test_elastic_scale_clamped():
+    c = _cluster()
+    assert c.scale("tpu", 64) == 32                # max_chips
+    assert c.scale("tpu", 0) == 4                  # min_chips
+    st = c.status()
+    assert st["pools"]["tpu"]["chips"] == 4
+
+
+def test_fail_nodes_revokes_leases():
+    c = _cluster()
+    revoked_cb = []
+    l1 = c.allocate("tpu", 12,
+                    on_revoke=lambda l: revoked_cb.append(l.lease_id))
+    assert c.status()["pools"]["tpu"]["free"] == 4
+    victims = c.fail_nodes("tpu", 2)               # lose 8 chips: 4 free + 4
+    assert victims and victims[0].revoked
+    assert revoked_cb == [l1.lease_id]
+    # released revoked lease does not return capacity
+    c.release(l1)
+    assert c.status()["pools"]["tpu"]["free"] == 0

@@ -1,0 +1,26 @@
+"""One real dry-run cell end-to-end in a subprocess (512 fake devices)."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell(tmp_path):
+    out = tmp_path / "dry"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "xlstm-125m", "--shape", "long_500k", "--mesh", "pod",
+         "--out", str(out)],
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        capture_output=True, text=True, timeout=600, cwd=str(tmp_path))
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(
+        (out / "xlstm-125m__long_500k__16x16.json").read_text())
+    assert rec["ok"] and rec["n_devices"] == 256
+    assert rec["roofline"]["t_compute_s"] >= 0

@@ -1,0 +1,45 @@
+"""Integration: HPO over an actual trainable LM + resume-from-store."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentConfig, Observation, Orchestrator, Param,
+                        Resources, Space)
+from repro.launch.train import train
+
+
+def lm_trial(a, ctx):
+    loss = train("xlstm-125m", steps=12, batch=2, seq=32, reduced=True,
+                 lr=a["lr"], warmup=2, log=ctx.log, log_every=6,
+                 seed=int(a.get("seed", 0)))
+    return loss
+
+
+@pytest.mark.slow
+def test_hpo_finds_reasonable_lr():
+    orch = Orchestrator(tempfile.mkdtemp())
+    cfg = ExperimentConfig(
+        name="lm-lr", budget=6, parallel=2, optimizer="sobol", goal="min",
+        space=Space([Param("lr", "double", 1e-5, 3e-1, log=True)]))
+    exp = orch.run(cfg, trial_fn=lm_trial)
+    st = orch.status(exp)
+    assert st["observations"] == 6
+    assert st["best"]["value"] is not None
+
+
+def test_resume_replays_observations():
+    orch = Orchestrator(tempfile.mkdtemp())
+    space = Space([Param("x", "double", 0, 1)])
+    cfg = ExperimentConfig(name="resume", budget=4, parallel=2,
+                           optimizer="gp", space=space)
+    exp = orch.run(cfg, trial_fn=lambda a, ctx: -(a["x"] - 0.4) ** 2)
+    # resume with a bigger budget: optimizer must start warm
+    cfg2 = ExperimentConfig(name="resume", budget=8, parallel=2,
+                            optimizer="gp", space=space)
+    orch2 = Orchestrator(str(orch.store.root))
+    exp2 = orch2.run(cfg2, trial_fn=lambda a, ctx: -(a["x"] - 0.4) ** 2,
+                     exp_id=exp)
+    assert exp2 == exp
+    obs = orch2.store.load_observations(exp)
+    assert len(obs) == 8

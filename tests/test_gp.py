@@ -1,0 +1,34 @@
+"""GP regression correctness."""
+import numpy as np
+import pytest
+
+from repro.core.suggest import gp
+
+
+def test_posterior_interpolates_training_points():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(size=(24, 2))
+    y = np.sin(4 * x[:, 0]) + 0.5 * x[:, 1]
+    post = gp.fit_gp(x, y, steps=220)
+    mu, sd = gp.predict(post, x.astype(np.float32))
+    assert float(np.max(np.abs(np.asarray(mu) - y))) < 0.12
+    assert float(np.mean(sd)) < 0.35
+
+
+def test_posterior_uncertainty_grows_off_data():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0.0, 0.4, size=(16, 1))
+    y = np.sin(6 * x[:, 0])
+    post = gp.fit_gp(x, y, steps=200)
+    _, sd_near = gp.predict(post, np.array([[0.2]], np.float32))
+    _, sd_far = gp.predict(post, np.array([[0.95]], np.float32))
+    assert float(sd_far[0]) > float(sd_near[0]) * 2
+
+
+def test_ei_prefers_promising_region():
+    x = np.array([[0.1], [0.5], [0.9]])
+    y = np.array([0.0, 1.0, 0.0])
+    post = gp.fit_gp(x, y, steps=200)
+    q = np.array([[0.5], [0.05]], np.float32)
+    ei = np.asarray(gp.expected_improvement(post, q, np.float32(1.0)))
+    assert np.all(ei >= 0)

@@ -1,0 +1,92 @@
+"""HLO analyzer: trip-count scaling, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.hlo import analyze
+from repro.distributed.auto_shard import auto_spec, batch_seq_spec
+from jax.sharding import PartitionSpec as P
+
+
+def test_scan_trip_count_scaling():
+    def body(x, w):
+        return x @ w, ()
+
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+    c = jax.jit(scanned).lower(x, ws).compile()
+    a = analyze(c.as_text(), 1)
+    assert a["flops"] == pytest.approx(10 * 2 * 128 ** 3, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    def inner(x, w):
+        return x @ w, ()
+
+    def outer(x, ws):
+        def body(c, _):
+            y, _ = jax.lax.scan(inner, c, ws)
+            return y, ()
+        y, _ = jax.lax.scan(body, x, None, length=4)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 64, 64), jnp.float32)
+    c = jax.jit(outer).lower(x, ws).compile()
+    a = analyze(c.as_text(), 1)
+    assert a["flops"] == pytest.approx(4 * 5 * 2 * 64 ** 3, rel=0.01)
+
+
+def test_matmul_flops_unscanned():
+    f = lambda a, b: a @ b
+    c = jax.jit(f).lower(jax.ShapeDtypeStruct((256, 128), jnp.float32),
+                         jax.ShapeDtypeStruct((128, 64), jnp.float32)
+                         ).compile()
+    a = analyze(c.as_text(), 1)
+    assert a["flops"] == pytest.approx(2 * 256 * 128 * 64, rel=0.01)
+
+
+# --- sharding rule helpers -------------------------------------------------
+class _FakeMesh:
+    def __init__(self, axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(self.shape)
+
+
+def test_auto_spec_divisibility():
+    mesh = _FakeMesh([("data", 16), ("model", 16)])
+    # 40 heads divide neither axis; d dims divide both
+    spec = auto_spec((40, 5120, 17920), mesh, min_elems=0)
+    assert spec[0] is None
+    used = []
+    for s in spec[1:]:
+        if isinstance(s, str):
+            used.append(s)
+        elif s:
+            used.extend(s)
+    assert set(used) == {"data", "model"}
+
+
+def test_auto_spec_small_leaf_replicated():
+    mesh = _FakeMesh([("data", 16), ("model", 16)])
+    assert auto_spec((4, 4, 192, 192), mesh) == P(None, None, None, None)
+
+
+def test_batch_seq_spec_full_batch_shard():
+    mesh = _FakeMesh([("data", 16), ("model", 16)])
+    assert batch_seq_spec(mesh, 256, 4096) == P(("data", "model"), None)
+
+
+def test_batch_seq_spec_sequence_parallel_fallback():
+    mesh = _FakeMesh([("data", 16), ("model", 16)])
+    assert batch_seq_spec(mesh, 32, 32768) == P(("data",), ("model",))
+
+
+def test_batch_seq_spec_multipod():
+    mesh = _FakeMesh([("pod", 2), ("data", 16), ("model", 16)])
+    assert batch_seq_spec(mesh, 256, 4096) == P(("pod", "data"), ("model",))

@@ -1,0 +1,92 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_quant import int8_quantize
+from repro.kernels.rglru_scan import rglru_scan
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (1, 64, 4, 4, 16),      # MHA
+    (2, 160, 8, 2, 32),     # GQA, ragged S vs block
+    (1, 300, 6, 1, 64),     # MQA, non-multiple S
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_causal(B, S, H, K, D, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_sliding_window(window):
+    rng = np.random.default_rng(1)
+    B, S, H, K, D = 1, 200, 4, 2, 32
+    q = jnp.asarray(rng.normal(0, 1, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), jnp.float32)
+    out = flash_attention(q, k, v, window=window, bq=64, bk=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_flash_softcap():
+    rng = np.random.default_rng(2)
+    B, S, H, K, D = 1, 128, 2, 2, 16
+    q = jnp.asarray(rng.normal(0, 2, (B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 2, (B, S, K, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, K, D)), jnp.float32)
+    out = flash_attention(q, k, v, softcap=20.0, bq=64, bk=64,
+                          interpret=True)
+    want = ref.flash_attention_ref(q, k, v, softcap=20.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+@pytest.mark.parametrize("B,S,R", [(1, 64, 32), (2, 100, 96), (1, 257, 520)])
+def test_rglru_scan_matches(B, S, R):
+    rng = np.random.default_rng(0)
+    la = jnp.asarray(-np.abs(rng.normal(0, 0.5, (B, S, R))), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 1, (B, S, R)), jnp.float32)
+    out = rglru_scan(la, b, bt=32, bf=64, interpret=True)
+    want = ref.rglru_scan_ref(la, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 2000), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=12, deadline=None)
+def test_int8_quant_roundtrip_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 2, (n,)), jnp.float32)
+    q, s = int8_quantize(x, interpret=True)
+    qr, sr = ref.int8_quant_ref(x)
+    assert bool(jnp.all(q == qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # dequantization error bounded by half a quantization step per block
+    deq = (np.asarray(q, np.float32)
+           * np.asarray(s)[:, None]).reshape(-1)[:n]
+    err = np.abs(deq - np.asarray(x))
+    bound = np.repeat(np.asarray(s), 256)[:n] * 0.5 + 1e-7
+    assert np.all(err <= bound)
+
+
+def test_ops_fallback_paths_run():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 32, 2, 2, )[:3] + (16,)), jnp.float32)
+    q = q.reshape(1, 32, 2, 16)
+    k = v = jnp.asarray(rng.normal(0, 1, (1, 32, 2, 16)), jnp.float32)
+    a = ops.flash_attention(q, k, v)                 # jnp fallback on CPU
+    b = ops.flash_attention(q, k, v, force_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

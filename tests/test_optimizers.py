@@ -1,0 +1,80 @@
+"""Every optimizer: in-bounds suggestions, convergence, failure handling."""
+import numpy as np
+import pytest
+
+from repro.core.space import Param, Space
+from repro.core.suggest import Observation, make_optimizer
+
+NAMES = ["random", "grid", "sobol", "evolution", "pso", "gp"]
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1),
+                  Param("y", "double", 1e-4, 1e0, log=True)])
+
+
+def _f(a):
+    return -((a["x"] - 0.62) ** 2 + (np.log10(a["y"]) + 2.0) ** 2)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_in_bounds_and_improves(name):
+    space = _space()
+    opt = make_optimizer(name, space, seed=1)
+    first = None
+    for _ in range(12):
+        asks = opt.ask(4)
+        obs = []
+        for a in asks:
+            clean = {k: v for k, v in a.items() if not k.startswith("__")}
+            assert space.validate(clean)
+            obs.append(Observation(
+                clean, _f(clean),
+                metadata={k: v for k, v in a.items() if k.startswith("__")}))
+        if first is None:
+            first = max(o.value for o in obs)
+        opt.tell(obs)
+    best = opt.best().value
+    assert best >= first          # never worse than the first batch
+    assert best > -1.0            # actually found a decent region
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_failed_observations_dont_crash(name):
+    space = _space()
+    opt = make_optimizer(name, space, seed=0)
+    for _ in range(4):
+        asks = opt.ask(2)
+        opt.tell([Observation(
+            {k: v for k, v in a.items() if not k.startswith("__")},
+            None, failed=True) for a in asks])
+    # optimizer still asks after only failures
+    assert len(opt.ask(2)) == 2
+    assert opt.best() is None
+
+
+def test_parallel_gp_asks_are_distinct():
+    """Constant-liar: simultaneous suggestions must not collapse."""
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=4)
+    for _ in range(3):
+        asks = opt.ask(4)
+        opt.tell([Observation(a, _f(a)) for a in asks])
+    batch = opt.ask(6)
+    pts = np.array([space.to_unit(a) for a in batch])
+    d = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+    np.fill_diagonal(d, 1.0)
+    assert d.min() > 1e-4
+
+
+def test_state_restore_resumes():
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0)
+    for _ in range(3):
+        asks = opt.ask(3)
+        opt.tell([Observation(a, _f(a)) for a in asks])
+    st = opt.state()
+    opt2 = make_optimizer("gp", space, seed=0)
+    opt2.restore(st)
+    assert len(opt2.history) == len(opt.history)
+    assert opt2.best().value == opt.best().value

@@ -1,0 +1,195 @@
+"""Scheduler semantics: parallelism bound, retry, ASHA, stragglers,
+admission control, preemption requeue, delete."""
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Cluster, ClusterConfig, ExperimentConfig, Orchestrator,
+                        Param, Resources, Space)
+from repro.core.faults import ChaosMonkey, FaultPolicy, wrap_trial
+
+
+def _orch():
+    return Orchestrator(tempfile.mkdtemp())
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def test_parallel_bound_respected():
+    orch = _orch()
+    in_flight, peak = [0], [0]
+    lock = threading.Lock()
+
+    def trial(a, ctx):
+        with lock:
+            in_flight[0] += 1
+            peak[0] = max(peak[0], in_flight[0])
+        time.sleep(0.03)
+        with lock:
+            in_flight[0] -= 1
+        return a["x"]
+
+    cfg = ExperimentConfig(name="p", budget=12, parallel=3,
+                           optimizer="random", space=_space())
+    orch.run(cfg, trial_fn=trial)
+    assert peak[0] <= 3
+    assert peak[0] >= 2          # actually ran concurrently
+
+
+def test_crash_retry_then_fail():
+    orch = _orch()
+    attempts = {}
+
+    def trial(a, ctx):
+        key = round(a["x"], 6)
+        attempts[key] = attempts.get(key, 0) + 1
+        raise RuntimeError("boom")
+
+    cfg = ExperimentConfig(name="c", budget=4, parallel=2, optimizer="random",
+                           space=_space(), max_retries=1)
+    exp = orch.run(cfg, trial_fn=trial)
+    st = orch.status(exp)
+    assert st["failures"] == 4
+    assert all(v == 2 for v in attempts.values())   # retried exactly once
+
+
+def test_admission_control_queues_when_full():
+    orch = _orch()
+    orch.cluster_create({"cluster_name": "small",
+                         "pools": [{"name": "tpu", "resource": "tpu",
+                                    "chips": 4}]})
+
+    def trial(a, ctx):
+        time.sleep(0.02)
+        return 1.0
+
+    cfg = ExperimentConfig(name="a", budget=6, parallel=4, optimizer="random",
+                           space=_space(),
+                           resources=Resources(pool="tpu", chips=4))
+    exp = orch.run(cfg, trial_fn=trial, cluster="small")
+    st = orch.status(exp)
+    assert st["observations"] == 6     # all ran, just serialized by capacity
+    c = orch.cluster_status("small")
+    assert c["pools"]["tpu"]["free"] == 4
+
+
+def test_asha_prunes():
+    orch = _orch()
+    stopped = []
+
+    def trial(a, ctx):
+        v = a["x"]
+        for step in (1, 3, 9):
+            ctx.report(step, v)
+            time.sleep(0.002)
+        return v
+
+    cfg = ExperimentConfig(name="asha", budget=18, parallel=6,
+                           optimizer="random", space=_space(),
+                           early_stop={"min_steps": 1, "eta": 3})
+    exp = orch.run(cfg, trial_fn=trial)
+    obs = orch.store.load_observations(exp)
+    pruned = [o for o in obs if o.metadata.get("pruned")]
+    full = [o for o in obs if not o.metadata.get("pruned") and not o.failed]
+    assert pruned, "ASHA should prune someone"
+    # survivors are better on average than the pruned
+    assert (np.mean([o.value for o in full])
+            > np.mean([o.value for o in pruned]))
+
+
+def test_straggler_speculation_wins():
+    orch = _orch()
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def trial(a, ctx):
+        with lock:
+            calls["n"] += 1
+            first = calls["n"] <= 4
+        # trials 1-4 are fast; the 5th's FIRST attempt hangs (straggler)
+        if not first and not ctx.trial_id.endswith("-spec1"):
+            for _ in range(400):
+                time.sleep(0.01)
+                ctx.report(1, 0.0)    # lets the loser get cancelled
+        time.sleep(0.01)
+        return a["x"]
+
+    cfg = ExperimentConfig(name="s", budget=5, parallel=2, optimizer="random",
+                           space=_space(), straggler_factor=3.0,
+                           max_retries=0)
+    t0 = time.time()
+    exp = orch.run(cfg, trial_fn=trial)
+    took = time.time() - t0
+    st = orch.status(exp)
+    assert st["observations"] == 5
+    assert took < 3.0, f"speculation should beat the 4s straggler ({took=})"
+
+
+def test_delete_stops_execution():
+    orch = _orch()
+    started = threading.Event()
+
+    def trial(a, ctx):
+        started.set()
+        for _ in range(1000):
+            time.sleep(0.005)
+            ctx.report(1, 0.0)
+        return 1.0
+
+    cfg = ExperimentConfig(name="d", budget=50, parallel=2,
+                           optimizer="random", space=_space())
+    exp = orch.run(cfg, trial_fn=trial, background=True)
+    assert started.wait(5.0)
+    orch.delete(exp)
+    orch.wait(exp, timeout=10)
+    assert orch.status(exp).get("state") in ("deleted", "stopped")
+
+
+def test_node_failure_requeues_and_completes():
+    orch = _orch()
+    orch.cluster_create({"cluster_name": "chaos",
+                         "pools": [{"name": "tpu", "resource": "tpu",
+                                    "chips": 8, "chips_per_node": 2}]})
+    cluster = orch.cluster_get("chaos")
+
+    def trial(a, ctx):
+        for _ in range(10):
+            time.sleep(0.005)
+            ctx.report(1, a["x"])
+        return a["x"]
+
+    monkey = ChaosMonkey(cluster, "tpu", period_s=0.05, heal_s=0.02).start()
+    try:
+        cfg = ExperimentConfig(name="n", budget=10, parallel=3,
+                               optimizer="random", space=_space(),
+                               resources=Resources(pool="tpu", chips=2),
+                               max_retries=3)
+        exp = orch.run(cfg, trial_fn=trial, cluster="chaos")
+    finally:
+        monkey.stop()
+    st = orch.status(exp)
+    assert monkey.kills >= 1
+    assert st["observations"] == 10    # work survived node failures
+
+
+def test_fault_injection_paths():
+    orch = _orch()
+
+    def trial(a, ctx):
+        return a["x"]
+
+    wrapped = wrap_trial(trial, FaultPolicy(p_crash=0.3, p_nan=0.2, seed=3))
+    cfg = ExperimentConfig(name="f", budget=20, parallel=4,
+                           optimizer="random", space=_space(), max_retries=0)
+    exp = orch.run(cfg, trial_fn=wrapped)
+    obs = orch.store.load_observations(exp)
+    crashed = [o for o in obs if o.failed]
+    nans = [o for o in obs if not o.failed and o.value is not None
+            and np.isnan(o.value)]
+    assert crashed, "some crashes expected"
+    assert len(obs) == 20

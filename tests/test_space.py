@@ -1,0 +1,57 @@
+"""Space: codec roundtrips and validity (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.space import Param, Space
+
+
+def _space():
+    return Space([
+        Param("lr", "double", 1e-5, 1e-1, log=True),
+        Param("width", "int", 8, 512),
+        Param("act", "categorical", choices=("relu", "gelu", "silu")),
+        Param("frac", "double", 0.0, 1.0),
+    ])
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sample_valid_and_roundtrip(seed):
+    space = _space()
+    rng = np.random.default_rng(seed)
+    for a in space.sample(rng, 5):
+        assert space.validate(a)
+        u = space.to_unit(a)
+        assert np.all((u >= 0) & (u <= 1))
+        b = space.from_unit(u)
+        assert space.validate(b)
+        # codec is idempotent on its own output
+        assert np.allclose(space.to_unit(b), space.to_unit(a), atol=1e-6)
+
+
+@given(st.lists(st.floats(0, 1), min_size=4, max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_from_unit_always_valid(u):
+    space = _space()
+    assert space.validate(space.from_unit(np.array(u)))
+
+
+def test_grid_covers_categoricals():
+    space = _space()
+    g = space.grid(2)
+    assert {a["act"] for a in g} == {"relu", "gelu", "silu"}
+    assert all(space.validate(a) for a in g)
+
+
+def test_config_roundtrip():
+    space = _space()
+    again = Space.from_config(space.to_config())
+    assert again.names == space.names
+    a = space.sample(np.random.default_rng(0), 1)[0]
+    assert np.allclose(space.to_unit(a), again.to_unit(a))
+
+
+def test_log_param_needs_positive_low():
+    with pytest.raises(ValueError):
+        Param("x", "double", 0.0, 1.0, log=True)
