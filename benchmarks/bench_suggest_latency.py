@@ -1,9 +1,19 @@
-"""Suggestion-service latency: us per ask() at growing history sizes — the
-hot path of the scheduler's fill loop."""
+"""Suggestion-service latency.
+
+Two sections:
+* us per raw ``ask()`` at growing history sizes — the optimizer hot path;
+* us per full suggest→observe round trip through the service API
+  (``LocalClient`` in-process vs the HTTP backend) — the overhead the
+  scheduler/worker loop actually pays per observation (API.md §Overhead).
+"""
+import tempfile
 import time
 
 import numpy as np
 
+from repro.api import CreateExperiment, HTTPClient, LocalClient, \
+    ObserveRequest, serve_api
+from repro.core.experiment import ExperimentConfig
 from repro.core.space import Param, Space
 from repro.core.suggest import Observation, make_optimizer
 
@@ -31,11 +41,49 @@ def run(history_sizes=(10, 50, 150), names=("random", "sobol", "evolution",
     return rows
 
 
+def _space():
+    return Space([Param("a", "double", 0, 1),
+                  Param("b", "double", 1e-4, 1, log=True),
+                  Param("c", "int", 1, 64)])
+
+
+def _roundtrips(client, n):
+    """n suggest→observe round trips; returns us per round trip."""
+    resp = client.create_experiment(CreateExperiment(config=ExperimentConfig(
+        name="bench", budget=n + 10, parallel=1, optimizer="random",
+        space=_space()).to_json()))
+    exp = resp.exp_id
+    # warm one full cycle (jit, connection setup)
+    s = client.suggest(exp, 1).suggestions[0]
+    client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment, 0.0))
+    t0 = time.perf_counter()
+    for i in range(n):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run_service(n=50):
+    """Service overhead: [(backend, us_per_suggest_observe_roundtrip)]."""
+    rows = [("local", _roundtrips(LocalClient(tempfile.mkdtemp()), n))]
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        rows.append(("http", _roundtrips(HTTPClient(server.url), n)))
+    finally:
+        server.shutdown()
+    return rows
+
+
 def main():
     print("# ask() latency vs history size")
     print("optimizer/history,us_per_call")
     for name, h, us in run():
         print(f"bench_suggest/{name}/h{h},{us:.0f}")
+    print("# suggest+observe round trip through the service API")
+    print("backend,us_per_roundtrip")
+    for backend, us in run_service():
+        print(f"bench_service/{backend},{us:.0f}")
 
 
 if __name__ == "__main__":

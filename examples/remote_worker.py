@@ -1,0 +1,96 @@
+"""Distributed HPO through the suggestion-service API (paper §2.1, §3.5).
+
+One process serves the experiment (optimizer + system-of-record store);
+any number of workers — on this host or others — drive the suggest/observe
+loop against it over HTTP.  This is the scenario the protocol exists for:
+the worker needs nothing but the service URL.
+
+Run against a live service (started with ``repro serve-api --port 8765``):
+
+    python examples/remote_worker.py --service http://HOST:8765 --workers 4
+
+With no ``--service``, a demo service is started in-process first.
+
+See API.md for the full v1 protocol (endpoints, schemas, error codes).
+"""
+import argparse
+import tempfile
+import threading
+import time
+
+from repro.api import CreateExperiment, HTTPClient, ObserveRequest, serve_api
+from repro.core import ExperimentConfig, Param, Space
+
+
+def objective(a):
+    """Stand-in for a real training run (maximize)."""
+    return -(a["lr"] - 0.3) ** 2 - 0.1 * (a["depth"] - 8) ** 2
+
+
+def worker_loop(url: str, exp_id: str, name: str) -> int:
+    """The entire worker contract: suggest -> evaluate -> observe."""
+    client = HTTPClient(url)
+    done = 0
+    while True:
+        batch = client.suggest(exp_id, 1)
+        if not batch.suggestions:
+            st = client.status(exp_id)
+            if (st.observations >= st.budget
+                    or st.state in ("complete", "stopped", "deleted")):
+                return done
+            time.sleep(0.02)    # others hold the remaining budget; retry
+            continue
+        s = batch.suggestions[0]
+        client.observe(ObserveRequest(
+            exp_id, s.suggestion_id, s.assignment,
+            value=objective(s.assignment), trial_id=name))
+        done += 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--service", default=None,
+                    help="URL of a running `repro serve-api`")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--budget", type=int, default=32)
+    args = ap.parse_args()
+
+    server = None
+    url = args.service
+    if url is None:
+        server = serve_api(tempfile.mkdtemp()).start()
+        url = server.url
+        print(f"demo service started at {url}")
+
+    client = HTTPClient(url)
+    cfg = ExperimentConfig(
+        name="remote-demo", budget=args.budget, parallel=args.workers,
+        optimizer="random",
+        space=Space([Param("lr", "double", 1e-3, 1.0, log=True),
+                     Param("depth", "int", 2, 16)]))
+    exp_id = client.create_experiment(
+        CreateExperiment(config=cfg.to_json())).exp_id
+    print(f"experiment {exp_id}: budget={cfg.budget}, "
+          f"{args.workers} workers")
+
+    counts = {}
+    threads = [threading.Thread(
+        target=lambda i=i: counts.__setitem__(
+            i, worker_loop(url, exp_id, f"worker{i}")))
+        for i in range(args.workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    st = client.status(exp_id)
+    best = client.best(exp_id)
+    print(f"done: {st.observations} observations "
+          f"({', '.join(f'worker{i}: {n}' for i, n in sorted(counts.items()))})")
+    print(f"best value {best.value:.4f} at {best.assignment}")
+    if server is not None:
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+# Suggestion-service API (v1): the typed suggest/observe boundary between
+# trial execution and the optimizer + system-of-record store.  See API.md.
+from repro.api.client import SuggestionClient
+from repro.api.http import ApiServer, HTTPClient, serve_api
+from repro.api.local import LocalClient
+from repro.api.protocol import (ApiError, BestRequest, BestResponse,
+                                CreateExperiment, CreateResponse,
+                                ObserveRequest, ObserveResponse,
+                                PROTOCOL_VERSION, ReleaseRequest,
+                                ReleaseResponse, StatusRequest,
+                                StatusResponse, StopRequest, SuggestBatch,
+                                Suggestion, SuggestRequest)
+
+__all__ = ["SuggestionClient", "LocalClient", "HTTPClient", "ApiServer",
+           "serve_api", "ApiError", "PROTOCOL_VERSION", "CreateExperiment",
+           "CreateResponse", "Suggestion", "SuggestRequest", "SuggestBatch",
+           "ObserveRequest", "ObserveResponse", "ReleaseRequest",
+           "ReleaseResponse", "StatusRequest", "StatusResponse",
+           "StopRequest", "BestRequest", "BestResponse"]

@@ -1,0 +1,231 @@
+"""HTTP backend for the suggestion service (stdlib-only).
+
+``serve_api`` exposes a ``LocalClient`` as JSON endpoints under
+``/v1/experiments/...`` so remote workers on other hosts can run the
+suggest/observe loop against one service process (paper §3.5: workers are
+thin clients of a central suggestion service).  ``HTTPClient`` is the
+matching ``SuggestionClient`` — ``Scheduler`` runs unchanged against
+either backend.
+
+Endpoint map (full schemas in API.md):
+  POST /v1/experiments                          create / resume
+  GET  /v1/experiments/{id}                     status
+  POST /v1/experiments/{id}/suggestions         suggest   {count}
+  POST /v1/experiments/{id}/observations        observe
+  POST /v1/experiments/{id}/release             release   {suggestion_id}
+  POST /v1/experiments/{id}/stop                stop      {state}
+  GET  /v1/experiments/{id}/best                best
+  GET  /v1/healthz                              liveness
+"""
+from __future__ import annotations
+
+import json
+import threading
+import urllib.error
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional, Union
+
+from repro.api.client import SuggestionClient
+from repro.api.local import LocalClient
+from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
+                                CreateResponse, E_BAD_REQUEST, E_INTERNAL,
+                                ObserveRequest, ObserveResponse,
+                                PROTOCOL_VERSION, ReleaseRequest,
+                                ReleaseResponse, StatusResponse, StopRequest,
+                                SuggestBatch, SuggestRequest)
+from repro.core.store import Store
+
+
+def _parse_path(path: str):
+    """-> (exp_id | None, action | None); raises ApiError on bad paths."""
+    parts = [p for p in path.split("?")[0].split("/") if p]
+    if parts == ["v1", "healthz"]:
+        return None, "healthz"
+    if not parts or parts[0] != "v1" or len(parts) < 2 \
+            or parts[1] != "experiments" or len(parts) > 4:
+        raise ApiError(E_BAD_REQUEST, f"no route for {path!r}")
+    exp_id = parts[2] if len(parts) > 2 else None
+    action = parts[3] if len(parts) > 3 else None
+    if action not in (None, "suggestions", "observations", "release",
+                      "stop", "best"):
+        raise ApiError(E_BAD_REQUEST, f"unknown action {action!r}")
+    return exp_id, action
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    backend: LocalClient = None           # set by serve_api
+
+    # silence per-request stderr lines
+    def log_message(self, fmt, *args):    # noqa: D102
+        pass
+
+    def _read_body(self) -> dict:
+        n = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(n) if n else b"{}"
+        try:
+            return json.loads(raw or b"{}")
+        except json.JSONDecodeError as e:
+            raise ApiError(E_BAD_REQUEST, f"invalid JSON body: {e}")
+
+    def _send(self, status: int, payload: dict) -> None:
+        body = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _dispatch(self, method: str) -> None:
+        try:
+            exp_id, action = _parse_path(self.path)
+            self._send(200, self._route(method, exp_id, action))
+        except ApiError as e:
+            self._send(e.http_status, e.to_json())
+        except Exception as e:  # noqa: service must answer, not die
+            err = ApiError(E_INTERNAL, f"{type(e).__name__}: {e}")
+            self._send(err.http_status, err.to_json())
+
+    def _route(self, method: str, exp_id: Optional[str],
+               action: Optional[str]) -> dict:
+        b = self.backend
+        if action == "healthz":
+            return {"ok": True, "version": PROTOCOL_VERSION}
+        if method == "POST" and exp_id is None and action is None:
+            req = CreateExperiment.from_json(self._read_body())
+            return b.create_experiment(req).to_json()
+        if exp_id is None:
+            raise ApiError(E_BAD_REQUEST, "experiment id required")
+        if method == "GET" and action is None:
+            return b.status(exp_id).to_json()
+        if method == "GET" and action == "best":
+            return b.best_response(exp_id).to_json()
+        if method != "POST":
+            raise ApiError(E_BAD_REQUEST, f"{method} not allowed here")
+        body = self._read_body()
+        body["exp_id"] = exp_id
+        if action == "suggestions":
+            req = SuggestRequest.from_json(body)
+            return b.suggest(req.exp_id, req.count).to_json()
+        if action == "observations":
+            return b.observe(ObserveRequest.from_json(body)).to_json()
+        if action == "release":
+            req = ReleaseRequest.from_json(body)
+            ok = b.release(req.exp_id, req.suggestion_id)
+            return ReleaseResponse(released=ok).to_json()
+        if action == "stop":
+            req = StopRequest.from_json(body)
+            return b.stop(req.exp_id, req.state).to_json()
+        raise ApiError(E_BAD_REQUEST, f"no route for {self.path!r}")
+
+    def do_GET(self):   # noqa: N802
+        self._dispatch("GET")
+
+    def do_POST(self):  # noqa: N802
+        self._dispatch("POST")
+
+
+class ApiServer:
+    """Owns the HTTP listener and the backing ``LocalClient``."""
+
+    def __init__(self, backend: LocalClient, host: str, port: int):
+        self.backend = backend
+        handler = type("BoundHandler", (_Handler,), {"backend": backend})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd.daemon_threads = True
+        self.host, self.port = self._httpd.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "ApiServer":
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        name="suggestion-api", daemon=True)
+        self._thread.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._httpd.serve_forever()
+
+    def shutdown(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+
+
+def serve_api(store: Union[Store, str, LocalClient],
+              host: str = "127.0.0.1", port: int = 0) -> ApiServer:
+    """Build (but don't start) an API server over a store root, a
+    ``Store``, or an existing ``LocalClient``.  ``port=0`` picks a free
+    port; read it back from ``server.port``/``server.url``."""
+    backend = store if isinstance(store, LocalClient) else LocalClient(store)
+    return ApiServer(backend, host, port)
+
+
+class HTTPClient(SuggestionClient):
+    """Remote-worker side of the wire: a ``SuggestionClient`` that speaks
+    the v1 JSON protocol against ``serve_api``."""
+
+    def __init__(self, base_url: str, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    # ------------------------------------------------------------ transport
+    def _call(self, method: str, path: str, payload: Optional[dict] = None
+              ) -> dict:
+        url = f"{self.base_url}{path}"
+        data = json.dumps(payload).encode() if payload is not None else None
+        req = urllib.request.Request(
+            url, data=data, method=method,
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read() or b"{}")
+        except urllib.error.HTTPError as e:
+            try:
+                raise ApiError.from_json(json.loads(e.read() or b"{}"))
+            except json.JSONDecodeError:
+                raise ApiError(E_INTERNAL, f"HTTP {e.code} from {url}")
+        except urllib.error.URLError as e:
+            raise ApiError(E_INTERNAL, f"service unreachable: {e.reason}")
+
+    # -------------------------------------------------------------- protocol
+    def create_experiment(self, req: CreateExperiment) -> CreateResponse:
+        return CreateResponse.from_json(
+            self._call("POST", "/v1/experiments", req.to_json()))
+
+    def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
+        return SuggestBatch.from_json(
+            self._call("POST", f"/v1/experiments/{exp_id}/suggestions",
+                       {"count": count}))
+
+    def observe(self, req: ObserveRequest) -> ObserveResponse:
+        return ObserveResponse.from_json(
+            self._call("POST",
+                       f"/v1/experiments/{req.exp_id}/observations",
+                       req.to_json()))
+
+    def release(self, exp_id: str, suggestion_id: str) -> bool:
+        resp = self._call("POST", f"/v1/experiments/{exp_id}/release",
+                          {"suggestion_id": suggestion_id})
+        return ReleaseResponse.from_json(resp).released
+
+    def status(self, exp_id: str) -> StatusResponse:
+        return StatusResponse.from_json(
+            self._call("GET", f"/v1/experiments/{exp_id}"))
+
+    def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
+        return StatusResponse.from_json(
+            self._call("POST", f"/v1/experiments/{exp_id}/stop",
+                       {"state": state}))
+
+    def best_response(self, exp_id: str) -> BestResponse:
+        return BestResponse.from_json(
+            self._call("GET", f"/v1/experiments/{exp_id}/best"))
+
+    def healthz(self) -> dict:
+        return self._call("GET", "/v1/healthz")

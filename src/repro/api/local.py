@@ -1,0 +1,209 @@
+"""In-process suggestion-service backend.
+
+``LocalClient`` owns what the scheduler used to reach into directly: the
+optimizer (via ``make_optimizer``) and the system-of-record ``Store``.
+All state transitions are lock-guarded, and every handed-out assignment is
+tracked as a *pending suggestion*, so concurrent ``suggest`` calls from
+parallel workers never receive duplicate assignments and never
+oversubscribe the observation budget.
+
+This same object is also the backend behind ``serve_api`` — the HTTP layer
+is a thin JSON shim over a ``LocalClient``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Dict, Optional, Set, Union
+
+from repro.api.client import SuggestionClient
+from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
+                                CreateResponse, E_UNKNOWN_EXPERIMENT,
+                                ObserveRequest, ObserveResponse,
+                                StatusResponse, SuggestBatch, Suggestion)
+from repro.core.experiment import ExperimentConfig
+from repro.core.store import Store
+from repro.core.suggest.base import Observation, Optimizer, make_optimizer
+
+
+class _ExperimentState:
+    """Live service-side state for one experiment (pending set is
+    in-memory only; a service restart reclaims all pending budget)."""
+
+    def __init__(self, cfg: ExperimentConfig, optimizer: Optimizer):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.lock = threading.RLock()
+        self.pending: Dict[str, Suggestion] = {}
+        self.closed: Set[str] = set()
+        self.observed = 0
+        self.failures = 0
+        self.stopped = False
+        self._seq = 0
+
+    def next_suggestion_id(self) -> str:
+        self._seq += 1
+        return f"s{self._seq:05d}"
+
+
+class LocalClient(SuggestionClient):
+    def __init__(self, store: Union[Store, str]):
+        self.store = store if isinstance(store, Store) else Store(store)
+        self._exps: Dict[str, _ExperimentState] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ lifecycle
+    def create_experiment(self, req: CreateExperiment) -> CreateResponse:
+        cfg = ExperimentConfig.from_json(req.config)
+        exp_id = req.exp_id
+        with self._lock:
+            on_disk = (exp_id is not None
+                       and (self.store.exp_dir(exp_id) / "config.json")
+                       .exists())
+            state = self._exps.get(exp_id) if exp_id else None
+            if state is None:
+                if exp_id is None:
+                    from repro.core.experiment import new_experiment_id
+                    exp_id = new_experiment_id()
+                if not on_disk:
+                    self.store.create_experiment(exp_id, cfg)
+                optimizer = make_optimizer(cfg.optimizer, cfg.space,
+                                           seed=cfg.seed,
+                                           **cfg.optimizer_options)
+                state = _ExperimentState(cfg, optimizer)
+                # grab the experiment lock BEFORE publishing so no
+                # concurrent suggest() sees observed=0 pre-replay
+                state.lock.acquire()
+                self._exps[exp_id] = state
+            else:
+                state.lock.acquire()
+            resumed = on_disk or state.observed > 0
+        try:
+            state.cfg = cfg          # resume may raise the budget
+            state.stopped = False    # re-creating declares intent to run
+            if resumed:
+                # keep the stored config in sync with the resumed one
+                (self.store.exp_dir(exp_id) / "config.json").write_text(
+                    json.dumps(cfg.to_json(), indent=1))
+            prior = self.store.load_observations(exp_id)
+            # restore() is idempotent: only the log tail beyond what the
+            # optimizer has already absorbed is replayed
+            state.optimizer.restore(
+                {"history": [o.to_json() for o in prior]})
+            state.observed = len(prior)
+            state.failures = sum(1 for o in prior if o.failed)
+        finally:
+            state.lock.release()
+        return CreateResponse(exp_id=exp_id, resumed=resumed,
+                              observations=state.observed)
+
+    def _state(self, exp_id: str) -> _ExperimentState:
+        with self._lock:
+            state = self._exps.get(exp_id)
+        if state is None:
+            raise ApiError(E_UNKNOWN_EXPERIMENT,
+                           f"no live experiment {exp_id!r}")
+        return state
+
+    # ------------------------------------------------------ suggest/observe
+    def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
+        state = self._state(exp_id)
+        with state.lock:
+            if state.stopped:
+                return SuggestBatch([], remaining=0)
+            headroom = (state.cfg.budget - state.observed
+                        - len(state.pending))
+            n = max(0, min(count, headroom))
+            batch = []
+            if n:
+                for a in state.optimizer.ask(n):
+                    s = Suggestion(state.next_suggestion_id(), a)
+                    state.pending[s.suggestion_id] = s
+                    batch.append(s)
+            remaining = (state.cfg.budget - state.observed
+                         - len(state.pending))
+            return SuggestBatch(batch, remaining=max(0, remaining))
+
+    def observe(self, req: ObserveRequest) -> ObserveResponse:
+        state = self._state(req.exp_id)
+        with state.lock:
+            if req.suggestion_id in state.closed:
+                return ObserveResponse(accepted=False, duplicate=True,
+                                       observations=state.observed)
+            if state.stopped:
+                # stopped/deleted experiments take no more observations
+                # (a straggler must not flip 'deleted' back to 'complete')
+                return ObserveResponse(accepted=False, duplicate=False,
+                                       observations=state.observed)
+            # tolerate untracked ids (service restart lost the pending set)
+            state.pending.pop(req.suggestion_id, None)
+            state.closed.add(req.suggestion_id)
+            obs = Observation(req.assignment, req.value, req.stddev,
+                              req.failed, dict(req.metadata))
+            state.optimizer.tell([obs])
+            self.store.append_observation(req.exp_id, obs, req.trial_id)
+            state.observed += 1
+            if req.failed:
+                state.failures += 1
+            best = state.optimizer.best()
+            fields = dict(observations=state.observed,
+                          failures=state.failures,
+                          best=best.to_json() if best else None)
+            if state.observed >= state.cfg.budget:
+                fields["state"] = "complete"
+            self.store.update_status(req.exp_id, **fields)
+            return ObserveResponse(accepted=True, duplicate=False,
+                                   observations=state.observed)
+
+    def release(self, exp_id: str, suggestion_id: str) -> bool:
+        state = self._state(exp_id)
+        with state.lock:
+            return state.pending.pop(suggestion_id, None) is not None
+
+    # -------------------------------------------------------------- queries
+    def status(self, exp_id: str) -> StatusResponse:
+        with self._lock:
+            state = self._exps.get(exp_id)
+        if state is not None:
+            with state.lock:
+                st = self.store.get_status(exp_id)
+                best = state.optimizer.best()
+                return StatusResponse(
+                    exp_id=exp_id, state=st.get("state", "pending"),
+                    name=state.cfg.name, budget=state.cfg.budget,
+                    observations=state.observed, failures=state.failures,
+                    pending=len(state.pending),
+                    best=best.to_json() if best else None)
+        return self._status_from_store(exp_id)
+
+    def _status_from_store(self, exp_id: str) -> StatusResponse:
+        """Cold path: experiment not live in this process — answer from
+        the system of record (works across process restarts)."""
+        try:
+            cfg = self.store.load_config(exp_id)
+        except FileNotFoundError:
+            raise ApiError(E_UNKNOWN_EXPERIMENT, f"no experiment {exp_id!r}")
+        st = self.store.get_status(exp_id)
+        obs = self.store.load_observations(exp_id)
+        ok = [o for o in obs if not o.failed and o.value is not None]
+        best = max(ok, key=lambda o: o.value) if ok else None
+        return StatusResponse(
+            exp_id=exp_id, state=st.get("state", "pending"), name=cfg.name,
+            budget=cfg.budget, observations=len(obs),
+            failures=sum(1 for o in obs if o.failed), pending=0,
+            best=best.to_json() if best else None)
+
+    def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
+        with self._lock:
+            exp = self._exps.get(exp_id)
+        if exp is not None:
+            with exp.lock:
+                exp.stopped = True
+                exp.pending.clear()
+        elif not (self.store.exp_dir(exp_id) / "config.json").exists():
+            raise ApiError(E_UNKNOWN_EXPERIMENT, f"no experiment {exp_id!r}")
+        self.store.update_status(exp_id, state=state)
+        return self.status(exp_id)
+
+    def best_response(self, exp_id: str) -> BestResponse:
+        return BestResponse(best=self.status(exp_id).best)

@@ -1,0 +1,297 @@
+"""Versioned suggestion-service wire protocol (v1).
+
+The paper's workers drive a *suggestion service* through a narrow
+suggest/observe loop (Orchestrate §2.1, §3.5).  This module is the typed
+contract for that loop: every operation has a request and a response
+dataclass with a stable JSON form, so the same messages flow through the
+in-process ``LocalClient`` and the HTTP backend unchanged.
+
+Operations (see API.md for the HTTP mapping):
+  create   CreateExperiment  -> CreateResponse
+  suggest  SuggestRequest    -> SuggestBatch
+  observe  ObserveRequest    -> ObserveResponse
+  release  ReleaseRequest    -> ReleaseResponse
+  status   StatusRequest     -> StatusResponse
+  stop     StopRequest       -> StatusResponse
+  best     BestRequest       -> BestResponse
+
+Pending-suggestion semantics: every assignment handed out by ``suggest``
+carries a unique ``suggestion_id`` and stays *pending* until it is either
+observed (exactly once — later observes are flagged duplicates) or
+released.  The service never hands out more than
+``budget - observations - pending`` new suggestions, so concurrent
+workers can't oversubscribe the budget or receive the same pending
+assignment twice.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+PROTOCOL_VERSION = "v1"
+
+# ------------------------------------------------------------------ errors
+E_BAD_REQUEST = "bad_request"                # 400
+E_UNKNOWN_EXPERIMENT = "unknown_experiment"  # 404
+E_UNKNOWN_SUGGESTION = "unknown_suggestion"  # 404
+E_EXPERIMENT_EXISTS = "experiment_exists"    # 409
+E_INTERNAL = "internal"                      # 500
+
+_HTTP_STATUS = {E_BAD_REQUEST: 400, E_UNKNOWN_EXPERIMENT: 404,
+                E_UNKNOWN_SUGGESTION: 404, E_EXPERIMENT_EXISTS: 409,
+                E_INTERNAL: 500}
+
+
+class ApiError(Exception):
+    """Service-level failure with a stable error code (API.md §Errors)."""
+
+    def __init__(self, code: str, message: str):
+        super().__init__(f"{code}: {message}")
+        self.code = code
+        self.message = message
+
+    @property
+    def http_status(self) -> int:
+        return _HTTP_STATUS.get(self.code, 500)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"error": {"code": self.code, "message": self.message}}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "ApiError":
+        e = d.get("error", d)
+        return cls(e.get("code", E_INTERNAL), e.get("message", ""))
+
+
+# ----------------------------------------------------------------- messages
+@dataclass
+class CreateExperiment:
+    """Create (or resume, when ``exp_id`` names an existing experiment)."""
+    config: Dict[str, Any]                  # ExperimentConfig.to_json()
+    exp_id: Optional[str] = None
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"version": PROTOCOL_VERSION, "config": self.config,
+                "exp_id": self.exp_id}
+
+    @classmethod
+    def from_json(cls, d: Dict[str, Any]) -> "CreateExperiment":
+        if "config" not in d:
+            raise ApiError(E_BAD_REQUEST, "create requires 'config'")
+        return cls(config=d["config"], exp_id=d.get("exp_id"))
+
+
+@dataclass
+class CreateResponse:
+    exp_id: str
+    resumed: bool = False
+    observations: int = 0                   # already in the log on resume
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "resumed": self.resumed,
+                "observations": self.observations}
+
+    @classmethod
+    def from_json(cls, d) -> "CreateResponse":
+        return cls(d["exp_id"], d.get("resumed", False),
+                   d.get("observations", 0))
+
+
+@dataclass
+class Suggestion:
+    """One pending assignment; observe/release it by ``suggestion_id``."""
+    suggestion_id: str
+    assignment: Dict[str, Any]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"suggestion_id": self.suggestion_id,
+                "assignment": self.assignment}
+
+    @classmethod
+    def from_json(cls, d) -> "Suggestion":
+        return cls(d["suggestion_id"], d["assignment"])
+
+
+@dataclass
+class SuggestRequest:
+    exp_id: str
+    count: int = 1
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "count": self.count}
+
+    @classmethod
+    def from_json(cls, d) -> "SuggestRequest":
+        count = int(d.get("count", 1))
+        if count < 0:
+            raise ApiError(E_BAD_REQUEST, f"count must be >= 0, got {count}")
+        return cls(d.get("exp_id", ""), count)
+
+
+@dataclass
+class SuggestBatch:
+    """May hold fewer than ``count`` suggestions: the service caps at
+    ``budget - observations - pending`` (and returns none once stopped)."""
+    suggestions: List[Suggestion] = field(default_factory=list)
+    remaining: int = 0                      # budget headroom after this batch
+
+    def __len__(self) -> int:
+        return len(self.suggestions)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"suggestions": [s.to_json() for s in self.suggestions],
+                "remaining": self.remaining}
+
+    @classmethod
+    def from_json(cls, d) -> "SuggestBatch":
+        return cls([Suggestion.from_json(s) for s in d.get("suggestions", [])],
+                   d.get("remaining", 0))
+
+
+@dataclass
+class ObserveRequest:
+    """Report the outcome of one suggestion.  ``value`` is goal-normalized
+    (maximize); ``failed=True`` with value None records a crash as data."""
+    exp_id: str
+    suggestion_id: str
+    assignment: Dict[str, Any]
+    value: Optional[float] = None
+    stddev: float = 0.0
+    failed: bool = False
+    trial_id: str = ""
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "suggestion_id": self.suggestion_id,
+                "assignment": self.assignment, "value": self.value,
+                "stddev": self.stddev, "failed": self.failed,
+                "trial_id": self.trial_id, "metadata": self.metadata}
+
+    @classmethod
+    def from_json(cls, d) -> "ObserveRequest":
+        if "suggestion_id" not in d or "assignment" not in d:
+            raise ApiError(E_BAD_REQUEST,
+                           "observe requires 'suggestion_id' + 'assignment'")
+        return cls(d.get("exp_id", ""), d["suggestion_id"], d["assignment"],
+                   d.get("value"), d.get("stddev", 0.0),
+                   d.get("failed", False), d.get("trial_id", ""),
+                   d.get("metadata", {}))
+
+
+@dataclass
+class ObserveResponse:
+    accepted: bool
+    duplicate: bool = False                 # suggestion was already observed
+    observations: int = 0                   # experiment-wide total
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"accepted": self.accepted, "duplicate": self.duplicate,
+                "observations": self.observations}
+
+    @classmethod
+    def from_json(cls, d) -> "ObserveResponse":
+        return cls(d.get("accepted", False), d.get("duplicate", False),
+                   d.get("observations", 0))
+
+
+@dataclass
+class ReleaseRequest:
+    """Return an unevaluated suggestion to the budget (worker shutdown)."""
+    exp_id: str
+    suggestion_id: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "suggestion_id": self.suggestion_id}
+
+    @classmethod
+    def from_json(cls, d) -> "ReleaseRequest":
+        if "suggestion_id" not in d:
+            raise ApiError(E_BAD_REQUEST, "release requires 'suggestion_id'")
+        return cls(d.get("exp_id", ""), d["suggestion_id"])
+
+
+@dataclass
+class ReleaseResponse:
+    released: bool
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"released": self.released}
+
+    @classmethod
+    def from_json(cls, d) -> "ReleaseResponse":
+        return cls(d.get("released", False))
+
+
+@dataclass
+class StatusRequest:
+    exp_id: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id}
+
+    @classmethod
+    def from_json(cls, d) -> "StatusRequest":
+        return cls(d.get("exp_id", ""))
+
+
+@dataclass
+class StatusResponse:
+    exp_id: str
+    state: str = "pending"
+    name: str = ""
+    budget: int = 0
+    observations: int = 0
+    failures: int = 0
+    pending: int = 0
+    best: Optional[Dict[str, Any]] = None   # Observation.to_json()
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "state": self.state, "name": self.name,
+                "budget": self.budget, "observations": self.observations,
+                "failures": self.failures, "pending": self.pending,
+                "best": self.best}
+
+    @classmethod
+    def from_json(cls, d) -> "StatusResponse":
+        return cls(d.get("exp_id", ""), d.get("state", "pending"),
+                   d.get("name", ""), d.get("budget", 0),
+                   d.get("observations", 0), d.get("failures", 0),
+                   d.get("pending", 0), d.get("best"))
+
+
+@dataclass
+class StopRequest:
+    """Terminate the experiment; pending suggestions are reclaimed."""
+    exp_id: str
+    state: str = "stopped"                  # stopped | deleted
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "state": self.state}
+
+    @classmethod
+    def from_json(cls, d) -> "StopRequest":
+        return cls(d.get("exp_id", ""), d.get("state", "stopped"))
+
+
+@dataclass
+class BestRequest:
+    exp_id: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id}
+
+    @classmethod
+    def from_json(cls, d) -> "BestRequest":
+        return cls(d.get("exp_id", ""))
+
+
+@dataclass
+class BestResponse:
+    best: Optional[Dict[str, Any]] = None   # Observation.to_json()
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"best": self.best}
+
+    @classmethod
+    def from_json(cls, d) -> "BestResponse":
+        return cls(d.get("best"))

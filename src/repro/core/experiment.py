@@ -97,3 +97,4 @@ class TrialSpec:
     assignment: Dict[str, Any]
     attempt: int = 0
     speculative: bool = False
+    suggestion_id: str = ""    # pending-suggestion handle at the service

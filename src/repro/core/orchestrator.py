@@ -1,7 +1,13 @@
-"""Experiment/cluster lifecycle — the library behind the six CLI verbs
+"""Experiment/cluster lifecycle — the library behind the CLI verbs
 (paper §3.1).  Cluster and experiment lifetimes are deliberately
 dissociated (paper §2.6): destroying a cluster never deletes experiment
 records from the store.
+
+The orchestrator never holds a raw ``Optimizer`` and never reaches into
+scheduler internals: all experiment state flows through a
+``SuggestionClient`` (see API.md) — the in-process ``LocalClient`` by
+default, or an ``HTTPClient`` when ``run(..., service=URL)`` drives the
+experiment against a remote ``repro serve-api`` process.
 """
 from __future__ import annotations
 
@@ -10,11 +16,12 @@ import threading
 import time
 from typing import Any, Callable, Dict, Iterator, Optional
 
+from repro.api.client import SuggestionClient
+from repro.api.protocol import ApiError, CreateExperiment
 from repro.core.cluster import Cluster, ClusterConfig
-from repro.core.experiment import ExperimentConfig, new_experiment_id
+from repro.core.experiment import ExperimentConfig
 from repro.core.scheduler import Scheduler, TrialContext
 from repro.core.store import Store
-from repro.core.suggest.base import make_optimizer
 
 
 def resolve_entrypoint(spec: str) -> Callable:
@@ -26,11 +33,17 @@ def resolve_entrypoint(spec: str) -> Callable:
 
 
 class Orchestrator:
-    def __init__(self, store_root: str = ".orchestrate"):
+    def __init__(self, store_root: str = ".orchestrate",
+                 client: Optional[SuggestionClient] = None):
+        # deferred import: repro.api.local depends back on repro.core
+        from repro.api.local import LocalClient
         self.store = Store(store_root)
+        self.client = client or LocalClient(self.store)
         self._clusters: Dict[str, Cluster] = {}
         self._schedulers: Dict[str, Scheduler] = {}
         self._threads: Dict[str, threading.Thread] = {}
+        self._exp_clients: Dict[str, SuggestionClient] = {}
+        self._exp_clusters: Dict[str, str] = {}
 
     # ------------------------------------------------------------- clusters
     def cluster_create(self, config: Dict[str, Any]) -> Cluster:
@@ -53,9 +66,12 @@ class Orchestrator:
         return cluster
 
     def cluster_destroy(self, name: str) -> bool:
-        """Tear down the cluster; experiment records remain in the store."""
+        """Tear down the cluster; experiment records remain in the store.
+        Only experiments attached to *this* cluster are stopped — runs on
+        other clusters (or cluster-less) keep going."""
         for exp_id, sched in list(self._schedulers.items()):
-            sched.stop()
+            if self._exp_clusters.get(exp_id) == name:
+                sched.stop()
         self._clusters.pop(name, None)
         return self.store.delete_cluster(name)
 
@@ -63,36 +79,41 @@ class Orchestrator:
         return self.cluster_get(name).status()
 
     # ----------------------------------------------------------- experiments
+    def _client_for(self, exp_id: str) -> SuggestionClient:
+        return self._exp_clients.get(exp_id, self.client)
+
     def run(self, cfg: ExperimentConfig,
             trial_fn: Optional[Callable[[Dict[str, Any], TrialContext],
                                         float]] = None,
             cluster: Optional[str] = None, background: bool = False,
-            exp_id: Optional[str] = None) -> str:
+            exp_id: Optional[str] = None,
+            service: Optional[str] = None) -> str:
         """Start (or resume) an experiment.  Resuming an existing exp_id
-        replays the observation log into the optimizer — experiment-level
-        checkpoint/restart."""
-        resume = exp_id is not None and (
-            self.store.exp_dir(exp_id) / "config.json").exists()
-        if exp_id is None:
-            exp_id = new_experiment_id()
-        if not resume:
-            self.store.create_experiment(exp_id, cfg)
+        replays the observation log into the service's optimizer exactly
+        once.  With ``service=URL`` the suggest/observe loop runs against
+        a remote ``repro serve-api`` process; trial logs and checkpoints
+        stay in this worker's local store."""
         if trial_fn is None:
             if not cfg.entrypoint:
                 raise ValueError("need trial_fn or cfg.entrypoint")
             trial_fn = resolve_entrypoint(cfg.entrypoint)
 
-        optimizer = make_optimizer(cfg.optimizer, cfg.space, seed=cfg.seed,
-                                   **cfg.optimizer_options)
-        if resume:
-            prior = self.store.load_observations(exp_id)
-            if prior:
-                optimizer.tell(prior)
+        from repro.api.http import HTTPClient
+        client = HTTPClient(service) if service else self.client
+        created = client.create_experiment(
+            CreateExperiment(config=cfg.to_json(), exp_id=exp_id))
+        exp_id = created.exp_id
+        self._exp_clients[exp_id] = client
+        if not (self.store.exp_dir(exp_id) / "config.json").exists():
+            # remote service (or externally-stored client): local mirror
+            # for trial logs / checkpoints / status
+            self.store.create_experiment(exp_id, cfg)
+
         clu = self.cluster_get(cluster) if cluster else None
-        sched = Scheduler(exp_id, cfg, optimizer, clu, self.store, trial_fn)
-        if resume:
-            sched._observations = len(self.store.load_observations(exp_id))
+        sched = Scheduler(exp_id, cfg, client, clu, self.store, trial_fn)
         self._schedulers[exp_id] = sched
+        if cluster:
+            self._exp_clusters[exp_id] = cluster
         if background:
             th = threading.Thread(target=sched.run, daemon=True,
                                   name=f"sched-{exp_id}")
@@ -108,30 +129,28 @@ class Orchestrator:
             th.join(timeout)
 
     def status(self, exp_id: str) -> Dict[str, Any]:
-        st = self.store.get_status(exp_id)
-        try:
-            cfg = self.store.load_config(exp_id)
-            st["name"] = cfg.name
-            st["budget"] = cfg.budget
-        except FileNotFoundError:
-            pass
+        resp = self._client_for(exp_id).status(exp_id)
+        st = dict(self.store.get_status(exp_id))   # local worker view
+        remote = resp.to_json()
+        remote.pop("exp_id", None)
+        # the service owns observation truth; lifecycle state defers to a
+        # local scheduler unless the service reached a terminal state
+        local_state = st.get("state")
+        terminal = ("complete", "stopped", "deleted", "failed")
+        state = (remote["state"] if remote["state"] in terminal
+                 or not local_state else local_state)
+        st.update(remote)
+        st["state"] = state
         sched = self._schedulers.get(exp_id)
         if sched:
-            st["running_trials"] = sched._in_flight()
-        obs = self.store.load_observations(exp_id)
-        st["observations"] = len(obs)
-        st["failures"] = sum(1 for o in obs if o.failed)
-        ok = [o for o in obs if not o.failed and o.value is not None]
-        if ok:
-            st["best"] = max(ok, key=lambda o: o.value).to_json()
+            st["running_trials"] = sched.running_trials
         return st
 
     def logs(self, exp_id: str, follow: bool = False) -> Iterator[str]:
         stop = None
         sched = self._schedulers.get(exp_id)
         if sched is not None:
-            stop = lambda: (sched._stop.is_set()
-                            or sched._observations >= sched.cfg.budget)
+            stop = lambda: sched.finished
         return self.store.iter_logs(exp_id, follow=follow, stop=stop)
 
     def delete(self, exp_id: str) -> None:
@@ -139,4 +158,9 @@ class Orchestrator:
         sched = self._schedulers.get(exp_id)
         if sched:
             sched.stop()
-        self.store.update_status(exp_id, state="deleted")
+        try:
+            self._client_for(exp_id).stop(exp_id, state="deleted")
+        except ApiError:
+            self.store.update_status(exp_id, state="deleted")
+        self._exp_clients.pop(exp_id, None)
+        self._exp_clusters.pop(exp_id, None)

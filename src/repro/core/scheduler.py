@@ -16,8 +16,12 @@ Responsibilities (paper mapping):
   from their checkpoint directory if they wrote one.
 
 Trials run on a thread pool: jax releases the GIL during compute, and on
-real TPU slices each trial drives its own device set.  The scheduler is the
-single writer of the experiment store.
+real TPU slices each trial drives its own device set.  The scheduler never
+holds a raw ``Optimizer``: it drives a ``SuggestionClient`` (suggest /
+observe / release — see API.md), so the same loop runs against the
+in-process ``LocalClient`` or a remote HTTP suggestion service.  The
+service is the single writer of the observation log; the scheduler writes
+only trial logs and its local status mirror.
 """
 from __future__ import annotations
 
@@ -30,11 +34,12 @@ from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.api.client import SuggestionClient
+from repro.api.protocol import ApiError, ObserveRequest
 from repro.core.cluster import Cluster, SliceLease
 from repro.core.experiment import ExperimentConfig, TrialSpec
 from repro.core.store import Store
-from repro.core.suggest import ASHA, Observation
-from repro.core.suggest.base import Optimizer
+from repro.core.suggest import ASHA
 
 
 class TrialStopped(Exception):
@@ -88,12 +93,12 @@ class _Running:
 
 class Scheduler:
     def __init__(self, exp_id: str, cfg: ExperimentConfig,
-                 optimizer: Optimizer, cluster: Optional[Cluster],
+                 client: SuggestionClient, cluster: Optional[Cluster],
                  store: Store, trial_fn: Callable[[Dict[str, Any],
                                                    TrialContext], float]):
         self.exp_id = exp_id
         self.cfg = cfg
-        self.optimizer = optimizer
+        self.client = client
         self.cluster = cluster
         self.store = store
         self.trial_fn = trial_fn
@@ -104,11 +109,21 @@ class Scheduler:
         self._running: Dict[str, _Running] = {}
         self._requeue: List[TrialSpec] = []
         self._done_values: List[float] = []     # runtimes of completions
+        self._reported: set = set()             # origins already observed
+        self._suggest_retry_at = 0.0            # backoff after empty batch
         self._observations = 0
         self._failures = 0
         self._trial_seq = 0
 
     # ----------------------------------------------------------------- api
+    @property
+    def running_trials(self) -> int:
+        return len(self._running)
+
+    @property
+    def finished(self) -> bool:
+        return self._stop.is_set() or self._observations >= self.cfg.budget
+
     def stop(self) -> None:
         """Terminate all executions (paper §2.5 / `delete` verb)."""
         self._stop.set()
@@ -116,16 +131,48 @@ class Scheduler:
             r.stop_flag.set()
 
     def run(self) -> Dict[str, Any]:
+        # resume lands mid-budget: the service knows how far the log got
+        for attempt in range(3):
+            try:
+                st = self.client.status(self.exp_id)
+                break
+            except ApiError as e:
+                if attempt == 2:
+                    # surface the failure instead of dying silently in a
+                    # background thread
+                    self.store.update_status(self.exp_id, state="failed",
+                                             error=str(e))
+                    raise
+                time.sleep(0.2 * (attempt + 1))
+        self._observations = st.observations
+        self._failures = st.failures
         self.store.update_status(self.exp_id, state="running",
                                  budget=self.cfg.budget)
         pool = ThreadPoolExecutor(max_workers=self.cfg.parallel + 2,
                                   thread_name_prefix=f"trial-{self.exp_id}")
         try:
+            idle = 0
             while (self._observations < self.cfg.budget
                    and not self._stop.is_set()):
                 self._fill_slots(pool)
                 self._maybe_speculate(pool)
                 self._harvest()
+                if not self._running and not self._requeue:
+                    # other workers may hold the remaining budget, or the
+                    # experiment may have been stopped service-side: re-sync
+                    idle += 1
+                    if idle % 20 == 0:
+                        try:
+                            st = self.client.status(self.exp_id)
+                        except ApiError:
+                            continue    # service blip; keep waiting
+                        self._observations = max(self._observations,
+                                                 st.observations)
+                        self._failures = max(self._failures, st.failures)
+                        if st.state in ("stopped", "deleted"):
+                            self._stop.set()
+                else:
+                    idle = 0
                 time.sleep(0.005)
         finally:
             self.stop()
@@ -134,8 +181,15 @@ class Scheduler:
             if futures:
                 wait(futures, timeout=30)
             self._harvest(final=True)
+            # locally-requeued specs still hold pending budget — return it
+            for spec in self._requeue:
+                self._release(spec)
+            self._requeue.clear()
             pool.shutdown(wait=False, cancel_futures=True)
-        best = self.optimizer.best()
+        try:
+            best = self.client.best(self.exp_id)
+        except ApiError:
+            best = None     # final readout is cosmetic; don't lose the run
         status = self.store.update_status(
             self.exp_id,
             state="complete" if not self._stop.is_set() or
@@ -149,10 +203,21 @@ class Scheduler:
         specs = []
         while self._requeue and len(specs) < n:
             specs.append(self._requeue.pop(0))
-        if len(specs) < n:
-            for a in self.optimizer.ask(n - len(specs)):
+        if len(specs) < n and time.time() >= self._suggest_retry_at:
+            try:
+                batch = self.client.suggest(self.exp_id, n - len(specs))
+            except ApiError:
+                # transient service failure: back off, retry next tick
+                self._suggest_retry_at = time.time() + 0.5
+                return specs
+            if not batch.suggestions:
+                # budget held by pending suggestions elsewhere — back off
+                self._suggest_retry_at = time.time() + 0.05
+            for s in batch.suggestions:
                 self._trial_seq += 1
-                specs.append(TrialSpec(f"t{self._trial_seq:04d}", a))
+                specs.append(TrialSpec(f"t{self._trial_seq:04d}",
+                                       s.assignment,
+                                       suggestion_id=s.suggestion_id))
         return specs
 
     def _in_flight(self) -> int:
@@ -236,13 +301,57 @@ class Scheduler:
                 continue
             if now - r.started > self.cfg.straggler_factor * med:
                 dup = TrialSpec(r.spec.trial_id, r.spec.assignment,
-                                attempt=r.spec.attempt + 1, speculative=True)
+                                attempt=r.spec.attempt + 1, speculative=True,
+                                suggestion_id=r.spec.suggestion_id)
                 if self._launch(pool, dup, speculative_of=r.spec.trial_id):
                     self.store.append_log(
                         self.exp_id, rid,
                         f"straggler: speculative duplicate launched "
                         f"(elapsed {now - r.started:.1f}s > "
                         f"{self.cfg.straggler_factor:.1f} x median {med:.1f}s)")
+
+    def _observe(self, spec: TrialSpec, origin: str,
+                 value: Optional[float], failed: bool = False,
+                 metadata: Optional[Dict[str, Any]] = None) -> None:
+        """Report one trial outcome through the suggestion service.  The
+        service deduplicates by suggestion_id (first observe wins), so a
+        speculative twin racing us is counted at most once.  Transient
+        service failures are retried; a lost observe must not abort the
+        whole run (the service reclaims the pending entry on restart)."""
+        req = ObserveRequest(
+            exp_id=self.exp_id, suggestion_id=spec.suggestion_id,
+            assignment=spec.assignment, value=value, failed=failed,
+            trial_id=origin, metadata=metadata or {})
+        resp = None
+        for attempt in range(3):
+            try:
+                resp = self.client.observe(req)
+                break
+            except ApiError as e:
+                if attempt == 2:
+                    self.store.append_log(
+                        self.exp_id, origin,
+                        f"observe lost after 3 attempts: {e}")
+                    # hand the budget slot back so the run can still
+                    # finish (the computed value is lost, a fresh
+                    # suggestion replaces it)
+                    self._release(spec)
+                else:
+                    time.sleep(0.1 * (attempt + 1))
+        self._reported.add(origin)
+        if resp is None or not resp.accepted:
+            return
+        self._observations = max(self._observations + 1, resp.observations)
+        if failed:
+            self._failures += 1
+
+    def _release(self, spec: TrialSpec) -> None:
+        if not spec.suggestion_id:
+            return
+        try:
+            self.client.release(self.exp_id, spec.suggestion_id)
+        except ApiError:
+            pass    # experiment already stopped/deleted service-side
 
     def _harvest(self, final: bool = False) -> None:
         done = [(rid, r) for rid, r in self._running.items()
@@ -267,10 +376,7 @@ class Scheduler:
                                       "TRACEBACK\n" + traceback.format_exc())
 
             origin = r.speculative_of or r.spec.trial_id
-            winner_done = any(o.metadata.get("trial_id") == origin
-                              for o in self.optimizer.history
-                              if o.metadata)
-            if winner_done:
+            if origin in self._reported:
                 continue    # a speculative twin already reported
 
             if err is None:
@@ -282,46 +388,38 @@ class Scheduler:
                 runtime = time.time() - r.started
                 self._done_values.append(runtime)
                 goal_v = value if self.cfg.goal == "max" else -value
-                obs = Observation(
-                    r.spec.assignment, goal_v,
-                    metadata={"trial_id": origin, "runtime_s": runtime,
-                              "attempt": r.spec.attempt,
-                              **{k: v for k, v in r.spec.assignment.items()
-                                 if k.startswith("__")}})
-                self.optimizer.tell([obs])
-                self.store.append_observation(self.exp_id, obs, origin)
-                self._observations += 1
+                self._observe(r.spec, origin, goal_v, metadata={
+                    "trial_id": origin, "runtime_s": runtime,
+                    "attempt": r.spec.attempt,
+                    **{k: v for k, v in r.spec.assignment.items()
+                       if k.startswith("__")}})
             elif err[0] == "stopped" and value is not None:
                 # early-stopped: record the last rung value as a pruned
                 # (partial) observation — informative, not a failure
                 goal_v = value if self.cfg.goal == "max" else -value
-                obs = Observation(r.spec.assignment, goal_v,
-                                  metadata={"trial_id": origin,
-                                            "pruned": True,
-                                            "pruned_at_step": stopped_at})
-                self.optimizer.tell([obs])
-                self.store.append_observation(self.exp_id, obs, origin)
-                self._observations += 1
+                self._observe(r.spec, origin, goal_v,
+                              metadata={"trial_id": origin, "pruned": True,
+                                        "pruned_at_step": stopped_at})
             elif err[0] == "stopped":
-                # stopped before any report (delete/shutdown): drop silently
-                pass
+                # stopped before any report (delete/shutdown): hand the
+                # unevaluated suggestion back to the budget
+                self._release(r.spec)
             elif err[0] == "preempted" or (err[0] == "crashed"
                                            and r.spec.attempt
                                            < self.cfg.max_retries):
                 if not final and not self._stop.is_set():
                     self._requeue.append(TrialSpec(
                         r.spec.trial_id, r.spec.assignment,
-                        attempt=r.spec.attempt + 1))
+                        attempt=r.spec.attempt + 1,
+                        suggestion_id=r.spec.suggestion_id))
                     self.store.append_log(self.exp_id, rid,
                                           f"requeued after {err[0]}")
+                else:
+                    self._release(r.spec)
             else:
-                obs = Observation(r.spec.assignment, None, failed=True,
-                                  metadata={"trial_id": origin,
-                                            "reason": err[1]})
-                self.optimizer.tell([obs])
-                self.store.append_observation(self.exp_id, obs, origin)
-                self._observations += 1
-                self._failures += 1
+                self._observe(r.spec, origin, None, failed=True,
+                              metadata={"trial_id": origin,
+                                        "reason": err[1]})
             self.store.update_status(
                 self.exp_id, observations=self._observations,
                 failures=self._failures, running=self._in_flight())

@@ -70,9 +70,14 @@ class Optimizer(abc.ABC):
         return {"history": [o.to_json() for o in self.history]}
 
     def restore(self, state: Dict[str, Any]) -> None:
+        """Idempotent replay of a checkpointed observation log: only the
+        tail beyond what this optimizer has already absorbed is fed to
+        ``tell``, so a checkpoint restore followed by a resume replay (or
+        two restores of the same log) never double-counts observations."""
         obs = [Observation.from_json(d) for d in state.get("history", [])]
-        if obs:
-            self.tell(obs)
+        new = obs[len(self.history):]
+        if new:
+            self.tell(new)
 
 
 _REGISTRY: Dict[str, Any] = {}

@@ -1,15 +1,23 @@
-"""The six CLI verbs (paper §3.1), model- and language-agnostic:
+"""The CLI verbs (paper §3.1), model- and language-agnostic:
 
   repro cluster create -f cluster.yml
-  repro run -f experiment.yml [--cluster NAME]
+  repro run -f experiment.yml [--cluster NAME] [--service URL]
   repro status EXPERIMENT_ID
   repro logs [--follow] EXPERIMENT_ID
   repro delete EXPERIMENT_ID
   repro cluster destroy -n CLUSTER_NAME
+  repro serve-api [--host H] [--port N]
 
 `run` executes the experiment's entrypoint ("module:function") under the
 scheduler; with --background it returns immediately (monitor with
 status/logs), mirroring the paper's split-screen workflow (Fig. 4).
+
+`serve-api` exposes this store's suggestion service over HTTP (the v1
+suggest/observe protocol — endpoints, schemas, and error codes are
+documented in API.md at the repo root).  A worker on another host then
+drives the same experiment with `repro run -f exp.yml --service URL`:
+suggestions and observations flow through the service, while trial logs
+and checkpoints stay in the worker's local store.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import time
 
 import yaml
 
+from repro.api.http import serve_api
 from repro.core.experiment import ExperimentConfig
 from repro.core.monitor import (format_cluster_status,
                                 format_experiment_status)
@@ -50,9 +59,22 @@ def main(argv=None) -> int:
     p_run.add_argument("-f", "--file", required=True)
     p_run.add_argument("--cluster", default=None)
     p_run.add_argument("--background", action="store_true")
+    p_run.add_argument("--service", default=None, metavar="URL",
+                       help="drive a remote suggestion service "
+                            "(repro serve-api) instead of in-process")
+    p_run.add_argument("--resume", default=None, metavar="EXPERIMENT_ID",
+                       help="resume an existing experiment id")
+
+    p_serve = sub.add_parser(
+        "serve-api", help="serve the v1 suggestion API over HTTP (API.md)")
+    p_serve.add_argument("--host", default="127.0.0.1")
+    p_serve.add_argument("--port", type=int, default=8765)
 
     p_status = sub.add_parser("status")
     p_status.add_argument("experiment_id")
+    p_status.add_argument("--service", default=None, metavar="URL",
+                          help="query a remote suggestion service instead "
+                               "of the local store")
 
     p_logs = sub.add_parser("logs")
     p_logs.add_argument("experiment_id")
@@ -81,10 +103,31 @@ def main(argv=None) -> int:
             print(format_cluster_status(orch.cluster_status(args.name)))
         return 0
 
+    if args.cmd == "serve-api":
+        try:
+            server = serve_api(orch.store, host=args.host, port=args.port)
+        except OSError as e:
+            print(f"cannot bind {args.host}:{args.port}: {e}",
+                  file=sys.stderr)
+            return 1
+        print(f"suggestion service (protocol v1) listening on {server.url}")
+        print(f"store: {orch.store.root}  —  see API.md for the endpoints")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            server.shutdown()
+        return 0
+
     if args.cmd == "run":
+        from repro.api.protocol import ApiError
         cfg = ExperimentConfig.from_json(_load(args.file))
-        exp_id = orch.run(cfg, cluster=args.cluster,
-                          background=args.background)
+        try:
+            exp_id = orch.run(cfg, cluster=args.cluster,
+                              background=args.background,
+                              exp_id=args.resume, service=args.service)
+        except ApiError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
         print(f"experiment {exp_id} "
               f"{'started' if args.background else 'complete'}")
         if not args.background:
@@ -99,8 +142,18 @@ def main(argv=None) -> int:
         return 0
 
     if args.cmd == "status":
-        print(format_experiment_status(args.experiment_id,
-                                       orch.status(args.experiment_id)))
+        from repro.api.protocol import ApiError
+        try:
+            if args.service:
+                from repro.api.http import HTTPClient
+                st = HTTPClient(args.service).status(
+                    args.experiment_id).to_json()
+            else:
+                st = orch.status(args.experiment_id)
+        except ApiError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        print(format_experiment_status(args.experiment_id, st))
         return 0
 
     if args.cmd == "logs":

@@ -165,6 +165,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: pathlib.Path,
 
         mem = _mem_dict(compiled.memory_analysis())
         xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, (list, tuple)):    # newer jax: per-program list
+            xla_cost = xla_cost[0] if xla_cost else {}
         xla_small = {k: v for k, v in xla_cost.items()
                      if k in ("flops", "bytes accessed", "transcendentals")}
         # trip-count-aware per-chip analysis (XLA's own cost_analysis counts

@@ -1,0 +1,294 @@
+"""Suggestion-service API (v1): protocol round-trips, pending-suggestion
+semantics, both backends end to end, resume replay, cluster-scoped stop."""
+import json
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.api import (ApiError, CreateExperiment, HTTPClient, LocalClient,
+                       ObserveRequest, StatusResponse, SuggestBatch,
+                       Suggestion, serve_api)
+from repro.core import (ExperimentConfig, Orchestrator, Param, Resources,
+                        Space)
+from repro.core.suggest import make_optimizer
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg(name="api", budget=6, parallel=3, **kw):
+    kw.setdefault("optimizer", "random")
+    return ExperimentConfig(name=name, budget=budget, parallel=parallel,
+                            space=_space(), **kw)
+
+
+def _create(client, cfg, exp_id=None):
+    return client.create_experiment(
+        CreateExperiment(config=cfg.to_json(), exp_id=exp_id))
+
+
+# ----------------------------------------------------------------- protocol
+def test_protocol_messages_roundtrip_json():
+    msgs = [
+        CreateExperiment(config={"name": "m", "space": []}, exp_id="e1"),
+        Suggestion("s00001", {"x": 0.5}),
+        SuggestBatch([Suggestion("s00001", {"x": 0.5})], remaining=3),
+        ObserveRequest("e1", "s00001", {"x": 0.5}, value=1.0,
+                       trial_id="t0001", metadata={"runtime_s": 0.1}),
+        StatusResponse("e1", state="running", name="m", budget=6,
+                       observations=2, failures=1, pending=3,
+                       best={"assignment": {"x": 0.5}, "value": 1.0}),
+    ]
+    for m in msgs:
+        wire = json.loads(json.dumps(m.to_json()))
+        assert type(m).from_json(wire) == m
+
+
+def test_api_error_codes_map_to_http_status():
+    assert ApiError("unknown_experiment", "x").http_status == 404
+    assert ApiError("bad_request", "x").http_status == 400
+    assert ApiError("internal", "x").http_status == 500
+
+
+# -------------------------------------------------------------- LocalClient
+def test_local_pending_tracking_caps_budget():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=5)).exp_id
+    b1 = client.suggest(exp, 3)
+    b2 = client.suggest(exp, 3)          # only 2 left: 5 - 0 - 3 pending
+    assert len(b1) == 3 and len(b2) == 2 and b2.remaining == 0
+    assert len(client.suggest(exp, 1)) == 0
+    ids = [s.suggestion_id for s in b1.suggestions + b2.suggestions]
+    assert len(set(ids)) == 5, "pending suggestions must be unique"
+    # observing frees no budget (observed replaces pending) …
+    s = b1.suggestions[0]
+    client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment, 1.0))
+    assert len(client.suggest(exp, 1)) == 0
+    # … but releasing an unevaluated one does
+    assert client.release(exp, b1.suggestions[1].suggestion_id)
+    assert len(client.suggest(exp, 2)) == 1
+
+
+def test_local_concurrent_suggest_never_duplicates():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=64, parallel=8)).exp_id
+    out, lock = [], threading.Lock()
+
+    def worker():
+        got = []
+        for _ in range(4):
+            got.extend(client.suggest(exp, 2).suggestions)
+        with lock:
+            out.extend(got)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ids = [s.suggestion_id for s in out]
+    assert len(ids) == 64 and len(set(ids)) == 64
+
+
+def test_local_observe_duplicate_and_untracked():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=4)).exp_id
+    s = client.suggest(exp, 1).suggestions[0]
+    r1 = client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                       0.5, trial_id="t0001"))
+    assert r1.accepted and not r1.duplicate and r1.observations == 1
+    # a speculative twin reporting the same suggestion is a duplicate
+    r2 = client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                       0.9, trial_id="t0001-spec1"))
+    assert not r2.accepted and r2.duplicate and r2.observations == 1
+    # untracked ids (service restarted) are tolerated, once
+    r3 = client.observe(ObserveRequest(exp, "s-foreign", {"x": 0.1}, 0.2))
+    assert r3.accepted and r3.observations == 2
+
+
+def test_unknown_experiment_raises_api_error():
+    client = LocalClient(tempfile.mkdtemp())
+    with pytest.raises(ApiError) as ei:
+        client.suggest("nope", 1)
+    assert ei.value.code == "unknown_experiment"
+
+
+# ------------------------------------------------- end-to-end, both backends
+def test_scheduler_e2e_through_local_client():
+    orch = Orchestrator(tempfile.mkdtemp())
+    exp = orch.run(_cfg(budget=8, parallel=4),
+                   trial_fn=lambda a, ctx: -(a["x"] - 0.4) ** 2)
+    st = orch.status(exp)
+    assert st["state"] == "complete"
+    assert st["observations"] == 8
+    assert st["pending"] == 0, "no pending suggestions may leak"
+    assert len(orch.store.load_observations(exp)) == 8
+
+
+def test_worker_loop_e2e_through_http_backend():
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        client = HTTPClient(server.url)
+        assert client.healthz()["ok"]
+        exp = _create(client, _cfg(name="http", budget=10)).exp_id
+        seen = set()
+        # bare worker loop, exactly the paper's suggest/observe protocol
+        while True:
+            batch = client.suggest(exp, 2)
+            if not batch.suggestions:
+                if client.status(exp).observations >= 10:
+                    break
+                continue
+            for s in batch.suggestions:
+                assert s.suggestion_id not in seen, "duplicate suggestion"
+                seen.add(s.suggestion_id)
+                client.observe(ObserveRequest(
+                    exp, s.suggestion_id, s.assignment,
+                    value=-(s.assignment["x"] - 0.25) ** 2))
+        st = client.status(exp)
+        assert st.observations == 10 and st.pending == 0
+        assert st.state == "complete"
+        assert client.best(exp) is not None
+        # observations are the service store's, in perpetuity
+        assert len(server.backend.store.load_observations(exp)) == 10
+    finally:
+        server.shutdown()
+
+
+def test_scheduler_drives_remote_service():
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        orch = Orchestrator(tempfile.mkdtemp())   # worker-local store
+        exp = orch.run(_cfg(name="remote", budget=6, parallel=2),
+                       trial_fn=lambda a, ctx: a["x"], service=server.url)
+        st = orch.status(exp)
+        assert st["observations"] == 6 and st["state"] == "complete"
+        # observation log lives on the service; logs live with the worker
+        assert len(server.backend.store.load_observations(exp)) == 6
+        assert orch.store.load_observations(exp) == []
+        assert list(orch.store.iter_logs(exp))
+    finally:
+        server.shutdown()
+
+
+def test_two_schedulers_share_one_http_experiment():
+    """The paper's distributed scenario: several worker processes drive
+    ONE experiment through the service; the budget is honored globally."""
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        client = HTTPClient(server.url)
+        cfg = _cfg(name="shared", budget=12, parallel=2)
+        exp = _create(client, cfg).exp_id
+
+        def run_worker():
+            orch = Orchestrator(tempfile.mkdtemp())
+            orch.run(_cfg(name="shared", budget=12, parallel=2),
+                     trial_fn=lambda a, ctx: a["x"], exp_id=exp,
+                     service=server.url)
+
+        workers = [threading.Thread(target=run_worker) for _ in range(2)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join(60)
+        st = client.status(exp)
+        assert st.observations == 12 and st.pending == 0
+        assert len(server.backend.store.load_observations(exp)) == 12
+    finally:
+        server.shutdown()
+
+
+def test_http_error_codes_over_the_wire():
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        client = HTTPClient(server.url)
+        with pytest.raises(ApiError) as ei:
+            client.suggest("missing", 1)
+        assert ei.value.code == "unknown_experiment"
+        with pytest.raises(ApiError) as ei:
+            client._call("POST", "/v1/experiments/x/bogus", {})
+        assert ei.value.code == "bad_request"
+        with pytest.raises(ApiError) as ei:
+            client._call("POST", "/v1/experiments", {})   # no config
+        assert ei.value.code == "bad_request"
+    finally:
+        server.shutdown()
+
+
+# ------------------------------------------------------------------- resume
+def test_resume_replays_observations_exactly_once():
+    root = tempfile.mkdtemp()
+    orch = Orchestrator(root)
+    calls = []
+    cfg = _cfg(name="resume", budget=4, parallel=2, optimizer="gp")
+    exp = orch.run(cfg, trial_fn=lambda a, ctx: calls.append(1) or a["x"])
+    assert len(calls) == 4
+
+    # fresh process: the service replays the log into a fresh optimizer
+    client = LocalClient(root)
+    resp = _create(client, _cfg(name="resume", budget=8, parallel=2,
+                                optimizer="gp"), exp_id=exp)
+    assert resp.resumed and resp.observations == 4
+    opt = client._exps[exp].optimizer
+    assert len(opt.history) == 4
+    # creating again must NOT double-count (restore is idempotent)
+    _create(client, _cfg(name="resume", budget=8, parallel=2,
+                         optimizer="gp"), exp_id=exp)
+    assert len(opt.history) == 4
+
+    # resumed run continues from the correct budget position
+    calls2 = []
+    orch2 = Orchestrator(root, client=client)
+    exp2 = orch2.run(_cfg(name="resume", budget=8, parallel=2,
+                          optimizer="gp"),
+                     trial_fn=lambda a, ctx: calls2.append(1) or a["x"],
+                     exp_id=exp)
+    assert exp2 == exp
+    assert len(calls2) == 4, "resume must only run the remaining budget"
+    assert len(orch2.store.load_observations(exp)) == 8
+    assert len(opt.history) == 8
+
+
+def test_optimizer_restore_is_idempotent():
+    space = _space()
+    opt = make_optimizer("random", space, seed=0)
+    log = [{"assignment": {"x": 0.1 * i}, "value": float(i)}
+           for i in range(5)]
+    opt.restore({"history": log})
+    opt.restore({"history": log})
+    assert len(opt.history) == 5
+    # longer log: only the tail is replayed
+    opt.restore({"history": log + [{"assignment": {"x": 0.9}, "value": 9.0}]})
+    assert len(opt.history) == 6
+
+
+# ------------------------------------------------- cluster-scoped shutdown
+def test_cluster_destroy_only_stops_its_own_experiments():
+    orch = Orchestrator(tempfile.mkdtemp())
+    for name in ("a", "b"):
+        orch.cluster_create({"cluster_name": name,
+                             "pools": [{"name": "tpu", "resource": "tpu",
+                                        "chips": 8}]})
+    gate = threading.Event()
+
+    def slow_trial(a, ctx):
+        gate.wait(10)
+        return a["x"]
+
+    res = Resources(pool="tpu", chips=2)
+    exp_a = orch.run(_cfg(name="on-a", budget=4, parallel=2, resources=res),
+                     trial_fn=slow_trial, cluster="a", background=True)
+    exp_b = orch.run(_cfg(name="on-b", budget=4, parallel=2, resources=res),
+                     trial_fn=slow_trial, cluster="b", background=True)
+    time.sleep(0.3)
+    orch.cluster_destroy("a")
+    assert orch._schedulers[exp_a].finished
+    assert not orch._schedulers[exp_b].finished, \
+        "destroying cluster 'a' must not stop experiments on cluster 'b'"
+    gate.set()
+    orch.wait(exp_a, 10)
+    orch.wait(exp_b, 10)
+    assert orch.status(exp_b)["observations"] == 4

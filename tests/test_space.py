@@ -1,6 +1,7 @@
 """Space: codec roundtrips and validity (hypothesis property tests)."""
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # not in the image
 from hypothesis import given, settings, strategies as st
 
 from repro.core.space import Param, Space
