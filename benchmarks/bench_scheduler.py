@@ -20,6 +20,15 @@ def throughput(parallel, budget=40):
     return budget / dt, dt / budget * 1e6
 
 
+def throughput_rows(parallels=(1, 8, 32), budget=40):
+    """[(parallel, us_per_trial, trials_per_s)] for the JSON harness.
+    A small warm-up run first so one-time import/jit cost doesn't land on
+    the first measured row."""
+    throughput(2, budget=4)
+    return [(p, us, tps) for p in parallels
+            for tps, us in [throughput(p, budget)]]
+
+
 def straggler_effect(speculate):
     orch = Orchestrator(tempfile.mkdtemp())
 

@@ -1,10 +1,15 @@
 """Suggestion-service latency.
 
-Two sections:
+Three sections:
 * us per raw ``ask()`` at growing history sizes — the optimizer hot path;
+* us per point for a batched ``ask(8)`` (the constant-liar q-EI pass the
+  scheduler actually uses to fill its parallel slots);
 * us per full suggest→observe round trip through the service API
   (``LocalClient`` in-process vs the HTTP backend) — the overhead the
   scheduler/worker loop actually pays per observation (API.md §Overhead).
+
+Each ``run*`` function returns structured rows; ``benchmarks/run.py
+--json`` aggregates them into ``BENCH_suggest.json``.
 """
 import tempfile
 import time
@@ -14,23 +19,33 @@ import numpy as np
 from repro.api import CreateExperiment, HTTPClient, LocalClient, \
     ObserveRequest, serve_api
 from repro.core.experiment import ExperimentConfig
-from repro.core.space import Param, Space
+from repro.core.space import Param, Space, strip_internal
 from repro.core.suggest import Observation, make_optimizer
+
+
+def _space():
+    return Space([Param("a", "double", 0, 1),
+                  Param("b", "double", 1e-4, 1, log=True),
+                  Param("c", "int", 1, 64)])
+
+
+def _seeded(name, h, rng):
+    space = _space()
+    opt = make_optimizer(name, space, seed=0)
+    obs = [Observation(a, float(rng.normal()))
+           for a in space.sample(rng, h)]
+    opt.tell(obs)
+    return opt
 
 
 def run(history_sizes=(10, 50, 150), names=("random", "sobol", "evolution",
                                             "pso", "gp")):
-    space = Space([Param("a", "double", 0, 1),
-                   Param("b", "double", 1e-4, 1, log=True),
-                   Param("c", "int", 1, 64)])
+    """[(optimizer, history, us_per_ask1)] — sequential ask(1) hot path."""
     rng = np.random.default_rng(0)
     rows = []
     for name in names:
         for h in history_sizes:
-            opt = make_optimizer(name, space, seed=0)
-            obs = [Observation(a, float(rng.normal()))
-                   for a in space.sample(rng, h)]
-            opt.tell(obs)
+            opt = _seeded(name, h, rng)
             opt.ask(1)                      # warm caches / jit
             t0 = time.perf_counter()
             n = 10
@@ -41,10 +56,51 @@ def run(history_sizes=(10, 50, 150), names=("random", "sobol", "evolution",
     return rows
 
 
-def _space():
-    return Space([Param("a", "double", 0, 1),
-                  Param("b", "double", 1e-4, 1, log=True),
-                  Param("c", "int", 1, 64)])
+def run_cycle(history_sizes=(10, 50, 150), names=("gp",)):
+    """[(optimizer, history, us_per_cycle)] for a tell(1)+ask(1) cycle —
+    the scheduler's steady-state pattern, which (for GP) pays one
+    warm-started hyperparameter fit per ask."""
+    rng = np.random.default_rng(0)
+    space = _space()
+    rows = []
+    for name in names:
+        for h in history_sizes:
+            opt = _seeded(name, h, rng)
+
+            def observe(a, value):
+                meta = {k: v for k, v in a.items() if k.startswith("__")}
+                opt.tell([Observation(strip_internal(a), value,
+                                      metadata=meta)])
+
+            a = opt.ask(1)[0]           # warm the cold-fit path
+            observe(a, 0.0)
+            a = opt.ask(1)[0]           # warm the warm-fit path (jit)
+            t0 = time.perf_counter()
+            n = 8
+            for _ in range(n):
+                observe(a, float(rng.normal()))
+                a = opt.ask(1)[0]
+            us = (time.perf_counter() - t0) / n * 1e6
+            rows.append((name, h, us))
+    return rows
+
+
+def run_batched(history_sizes=(10, 50, 150), batch=8, names=("gp",)):
+    """[(optimizer, history, us_per_point)] for a single ask(batch) — the
+    parallel-slot-filling path (one fit + one jitted q-EI scan for GP)."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for name in names:
+        for h in history_sizes:
+            opt = _seeded(name, h, rng)
+            opt.ask(batch)                  # warm caches / jit
+            t0 = time.perf_counter()
+            n = 3
+            for _ in range(n):
+                opt.ask(batch)
+            us = (time.perf_counter() - t0) / (n * batch) * 1e6
+            rows.append((name, h, us))
+    return rows
 
 
 def _roundtrips(client, n):
@@ -80,6 +136,12 @@ def main():
     print("optimizer/history,us_per_call")
     for name, h, us in run():
         print(f"bench_suggest/{name}/h{h},{us:.0f}")
+    print("# batched ask(8), per point")
+    for name, h, us in run_batched():
+        print(f"bench_suggest/{name}_batch8/h{h},{us:.0f}")
+    print("# tell(1)+ask(1) cycle (includes the warm hyperparameter fit)")
+    for name, h, us in run_cycle():
+        print(f"bench_suggest/{name}_cycle/h{h},{us:.0f}")
     print("# suggest+observe round trip through the service API")
     print("backend,us_per_roundtrip")
     for backend, us in run_service():

@@ -1,11 +1,80 @@
-"""Benchmark harness: one section per paper claim/figure + the roofline
-readout.  Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §9
-for the experiment index)."""
+"""Benchmark harness.
+
+Two modes:
+
+* ``python -m benchmarks.run`` — legacy CSV: one section per paper
+  claim/figure + the roofline readout, ``name,us_per_call,derived`` rows.
+* ``python -m benchmarks.run --json [FILE] [--quick]`` — machine-readable
+  perf trajectory: runs the suggestion/service/scheduler hot-path benches
+  and writes ``BENCH_suggest.json`` (schema below), so speedups and
+  regressions are tracked across PRs.  ``--quick`` shrinks history sizes
+  and repetitions for CI (the tier-2 perf gate — see scripts/bench_check.py
+  and ROADMAP.md).
+
+JSON schema::
+
+  {"schema": 1, "unit": "us", "created": <epoch>, "quick": bool,
+   "rows": {"bench_suggest/gp/h150": 7600.0, ...}}
+"""
+import argparse
+import json
 import sys
+import time
 import traceback
 
 
-def main() -> None:
+def collect(quick: bool = False) -> dict:
+    """Hot-path rows only (suggest / service / scheduler) — the tracked
+    perf surface.  Returns {row_name: us}."""
+    from benchmarks import bench_scheduler, bench_suggest_latency
+    rows = {}
+    hist = (10, 50) if quick else (10, 50, 150)
+    names = (("random", "gp") if quick
+             else ("random", "sobol", "evolution", "pso", "gp"))
+    for name, h, us in bench_suggest_latency.run(history_sizes=hist,
+                                                 names=names):
+        rows[f"bench_suggest/{name}/h{h}"] = round(us, 1)
+    for name, h, us in bench_suggest_latency.run_batched(history_sizes=hist):
+        rows[f"bench_suggest/{name}_batch8/h{h}"] = round(us, 1)
+    for name, h, us in bench_suggest_latency.run_cycle(history_sizes=hist):
+        rows[f"bench_suggest/{name}_cycle/h{h}"] = round(us, 1)
+    for backend, us in bench_suggest_latency.run_service(
+            n=20 if quick else 100):
+        rows[f"bench_service/{backend}"] = round(us, 1)
+    for p, us, tps in bench_scheduler.throughput_rows(
+            parallels=(8,) if quick else (1, 8, 32),
+            budget=20 if quick else 40):
+        rows[f"bench_scheduler/throughput/p{p}"] = round(us, 1)
+    return rows
+
+
+def write_json(path: str, quick: bool = False) -> dict:
+    payload = {"schema": 1, "unit": "us", "created": time.time(),
+               "quick": quick, "rows": collect(quick=quick)}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_suggest.json",
+                    default=None, metavar="FILE",
+                    help="write machine-readable rows to FILE "
+                         "(default BENCH_suggest.json) instead of CSV")
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep for CI perf gating")
+    args = ap.parse_args(argv)
+
+    if args.json:
+        payload = write_json(args.json, quick=args.quick)
+        for name, us in sorted(payload["rows"].items()):
+            print(f"{name},{us:.0f}")
+        print(f"wrote {len(payload['rows'])} rows to {args.json}",
+              file=sys.stderr)
+        return
+
     from benchmarks import (bench_optimizers, bench_parallel,
                             bench_population, bench_roofline,
                             bench_scheduler, bench_suggest_latency)

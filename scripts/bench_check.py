@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Tier-2 perf gate (see ROADMAP.md).
+
+Runs the quick hot-path benchmark sweep, writes fresh rows, and compares
+them against the committed ``BENCH_suggest.json`` baseline: any gated row
+slower than ``tolerance``x its baseline fails the check (exit 1).  Gated
+rows are the suggestion/service hot path; scheduler throughput is reported
+but not gated (too machine-dependent).
+
+Usage:
+  PYTHONPATH=src python scripts/bench_check.py             # gate vs baseline
+  PYTHONPATH=src python scripts/bench_check.py --update    # refresh baseline
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GATED_PREFIXES = ("bench_suggest/gp", "bench_service/")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_suggest.json"))
+    ap.add_argument("--out", default=None,
+                    help="where to write fresh rows (default: temp only, "
+                         "or the baseline itself with --update)")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="fail when a gated row exceeds this multiple of "
+                         "its baseline (default 3.0 — the gate catches "
+                         "order-of-magnitude regressions; run on an idle "
+                         "machine, 2x noise under CPU contention is real)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline with the fresh rows")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(REPO))
+    sys.path.insert(0, str(REPO / "src"))
+    from benchmarks import run as bench_run
+
+    fresh = bench_run.collect(quick=True)
+    out = args.out or (args.baseline if args.update else None)
+    if out:
+        # merge into an existing baseline: the quick sweep covers only a
+        # subset of rows (no h150 etc.) and must not drop the rest — and
+        # keep run.py's schema (created timestamp, quick flag) intact
+        payload = {"schema": 1, "unit": "us", "quick": True, "rows": {}}
+        if pathlib.Path(out).exists():
+            try:
+                prior = json.loads(pathlib.Path(out).read_text())
+                if isinstance(prior.get("rows"), dict):
+                    payload.update(prior)
+            except json.JSONDecodeError:
+                pass
+        payload["rows"] = dict(payload["rows"], **fresh)
+        payload["created"] = time.time()
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {out} ({len(fresh)} refreshed, "
+              f"{len(payload['rows'])} total rows)")
+    if args.update:
+        return 0
+
+    base_path = pathlib.Path(args.baseline)
+    if not base_path.exists():
+        print(f"no baseline at {base_path}; run with --update to create one")
+        return 0
+    baseline = json.loads(base_path.read_text())["rows"]
+
+    failures = []
+    for name, us in sorted(fresh.items()):
+        ref = baseline.get(name)
+        gated = any(name.startswith(p) for p in GATED_PREFIXES)
+        note = ""
+        if ref:
+            ratio = us / ref
+            note = f"  baseline={ref:.0f}us  x{ratio:.2f}"
+            if gated and ratio > args.tolerance:
+                note += "  REGRESSION"
+                failures.append(name)
+        print(f"{name:44s} {us:10.0f}us{note}")
+    if failures:
+        print(f"\nPERF GATE FAILED ({len(failures)} rows > "
+              f"{args.tolerance}x baseline): {', '.join(failures)}")
+        return 1
+    print("\nperf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

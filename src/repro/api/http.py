@@ -19,12 +19,12 @@ Endpoint map (full schemas in API.md):
 """
 from __future__ import annotations
 
+import http.client
 import json
 import threading
-import urllib.error
-import urllib.request
+import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional, Union
+from typing import Optional, Tuple, Union
 
 from repro.api.client import SuggestionClient
 from repro.api.local import LocalClient
@@ -62,12 +62,20 @@ class _Handler(BaseHTTPRequestHandler):
         pass
 
     def _read_body(self) -> dict:
-        n = int(self.headers.get("Content-Length") or 0)
-        raw = self.rfile.read(n) if n else b"{}"
+        raw = self._take_body() or b"{}"
         try:
-            return json.loads(raw or b"{}")
+            return json.loads(raw)
         except json.JSONDecodeError as e:
             raise ApiError(E_BAD_REQUEST, f"invalid JSON body: {e}")
+
+    def _take_body(self) -> bytes:
+        """Consume the request body exactly once.  Every request must end
+        up drained — an unread body would be parsed as the next request
+        line on a keep-alive connection."""
+        if getattr(self, "_body", None) is None:
+            n = int(self.headers.get("Content-Length") or 0)
+            self._body = self.rfile.read(n) if n else b""
+        return self._body
 
     def _send(self, status: int, payload: dict) -> None:
         body = json.dumps(payload).encode()
@@ -78,6 +86,7 @@ class _Handler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _dispatch(self, method: str) -> None:
+        self._body = None
         try:
             exp_id, action = _parse_path(self.path)
             self._send(200, self._route(method, exp_id, action))
@@ -86,6 +95,8 @@ class _Handler(BaseHTTPRequestHandler):
         except Exception as e:  # noqa: service must answer, not die
             err = ApiError(E_INTERNAL, f"{type(e).__name__}: {e}")
             self._send(err.http_status, err.to_json())
+        finally:
+            self._take_body()   # drain for keep-alive reuse
 
     def _route(self, method: str, exp_id: Optional[str],
                action: Optional[str]) -> dict:
@@ -168,30 +179,91 @@ def serve_api(store: Union[Store, str, LocalClient],
 
 class HTTPClient(SuggestionClient):
     """Remote-worker side of the wire: a ``SuggestionClient`` that speaks
-    the v1 JSON protocol against ``serve_api``."""
+    the v1 JSON protocol against ``serve_api``.
+
+    Transport: one persistent keep-alive ``http.client.HTTPConnection``
+    per thread (the scheduler loop pays one TCP handshake total instead of
+    one per request).  A request that fails on a *reused* connection —
+    the server closed an idle keep-alive — transparently reconnects and
+    retries once; a failure on a fresh connection is surfaced as
+    ``service unreachable``, matching the old per-request behavior."""
 
     def __init__(self, base_url: str, timeout: float = 30.0):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
+        u = urllib.parse.urlsplit(self.base_url)
+        if u.scheme not in ("http", "https"):
+            raise ValueError(f"unsupported scheme in {base_url!r}")
+        self._conn_cls = (http.client.HTTPSConnection if u.scheme == "https"
+                          else http.client.HTTPConnection)
+        self._host = u.hostname or "127.0.0.1"
+        self._port = u.port or (443 if u.scheme == "https" else 80)
+        self._prefix = u.path.rstrip("/")
+        self._local = threading.local()
 
     # ------------------------------------------------------------ transport
-    def _call(self, method: str, path: str, payload: Optional[dict] = None
-              ) -> dict:
-        url = f"{self.base_url}{path}"
-        data = json.dumps(payload).encode() if payload is not None else None
-        req = urllib.request.Request(
-            url, data=data, method=method,
-            headers={"Content-Type": "application/json"})
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout) as resp:
-                return json.loads(resp.read() or b"{}")
-        except urllib.error.HTTPError as e:
+    def _conn(self) -> Tuple[http.client.HTTPConnection, bool]:
+        """-> (connection, fresh); fresh=True when newly established."""
+        c = getattr(self._local, "conn", None)
+        if c is not None:
+            return c, False
+        c = self._conn_cls(self._host, self._port, timeout=self.timeout)
+        self._local.conn = c
+        return c, True
+
+    def _drop_conn(self) -> None:
+        c = getattr(self._local, "conn", None)
+        self._local.conn = None
+        if c is not None:
             try:
-                raise ApiError.from_json(json.loads(e.read() or b"{}"))
-            except json.JSONDecodeError:
-                raise ApiError(E_INTERNAL, f"HTTP {e.code} from {url}")
-        except urllib.error.URLError as e:
-            raise ApiError(E_INTERNAL, f"service unreachable: {e.reason}")
+                c.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        """Close this thread's persistent connection (idempotent)."""
+        self._drop_conn()
+
+    def _call(self, method: str, path: str, payload: Optional[dict] = None,
+              idempotent: bool = True) -> dict:
+        body = json.dumps(payload).encode() if payload is not None else None
+        headers = {"Content-Type": "application/json"}
+        url = self._prefix + path
+        while True:
+            conn, fresh = self._conn()
+            try:
+                conn.request(method, url, body=body, headers=headers)
+            except (http.client.HTTPException, ConnectionError, OSError) as e:
+                # send-phase failure: the stale socket rejected the write,
+                # so the server never processed the request — safe to
+                # reconnect and retry even for non-idempotent verbs
+                self._drop_conn()
+                if fresh:
+                    raise ApiError(E_INTERNAL, f"service unreachable: {e}")
+                continue
+            try:
+                resp = conn.getresponse()
+                raw = resp.read()       # drain fully so the conn is reusable
+                status = resp.status
+                if resp.will_close:
+                    self._drop_conn()
+            except (http.client.HTTPException, ConnectionError, OSError) as e:
+                self._drop_conn()
+                if fresh or not idempotent:
+                    # response-phase failure is ambiguous — the server may
+                    # have committed the request.  Non-idempotent verbs
+                    # (suggest) must not auto-retry here: a blind resend
+                    # would leak pending budget — surface the error and
+                    # let the caller decide
+                    raise ApiError(E_INTERNAL, f"service unreachable: {e}")
+                continue                # stale keep-alive: retry once, fresh
+            if status >= 400:
+                try:
+                    raise ApiError.from_json(json.loads(raw or b"{}"))
+                except json.JSONDecodeError:
+                    raise ApiError(E_INTERNAL,
+                                   f"HTTP {status} from {self.base_url}{path}")
+            return json.loads(raw or b"{}")
 
     # -------------------------------------------------------------- protocol
     def create_experiment(self, req: CreateExperiment) -> CreateResponse:
@@ -201,7 +273,7 @@ class HTTPClient(SuggestionClient):
     def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
         return SuggestBatch.from_json(
             self._call("POST", f"/v1/experiments/{exp_id}/suggestions",
-                       {"count": count}))
+                       {"count": count}, idempotent=False))
 
     def observe(self, req: ObserveRequest) -> ObserveResponse:
         return ObserveResponse.from_json(

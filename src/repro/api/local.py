@@ -22,6 +22,7 @@ from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 ObserveRequest, ObserveResponse,
                                 StatusResponse, SuggestBatch, Suggestion)
 from repro.core.experiment import ExperimentConfig
+from repro.core.space import strip_internal
 from repro.core.store import Store
 from repro.core.suggest.base import Observation, Optimizer, make_optimizer
 
@@ -44,6 +45,18 @@ class _ExperimentState:
     def next_suggestion_id(self) -> str:
         self._seq += 1
         return f"s{self._seq:05d}"
+
+
+def _public_best(best) -> Optional[Dict]:
+    """Serialize a best observation for user-facing readouts, stripping
+    internal ``__``-prefixed echo keys (constant-liar tokens, particle
+    ids) from the assignment."""
+    if best is None:
+        return None
+    d = best.to_json()
+    if isinstance(d.get("assignment"), dict):
+        d["assignment"] = strip_internal(d["assignment"])
+    return d
 
 
 class LocalClient(SuggestionClient):
@@ -148,7 +161,7 @@ class LocalClient(SuggestionClient):
             best = state.optimizer.best()
             fields = dict(observations=state.observed,
                           failures=state.failures,
-                          best=best.to_json() if best else None)
+                          best=_public_best(best))
             if state.observed >= state.cfg.budget:
                 fields["state"] = "complete"
             self.store.update_status(req.exp_id, **fields)
@@ -158,7 +171,12 @@ class LocalClient(SuggestionClient):
     def release(self, exp_id: str, suggestion_id: str) -> bool:
         state = self._state(exp_id)
         with state.lock:
-            return state.pending.pop(suggestion_id, None) is not None
+            s = state.pending.pop(suggestion_id, None)
+            if s is not None:
+                # never coming back: let the optimizer drop its
+                # constant-liar bookkeeping for this point
+                state.optimizer.forget(s.assignment)
+            return s is not None
 
     # -------------------------------------------------------------- queries
     def status(self, exp_id: str) -> StatusResponse:
@@ -173,7 +191,7 @@ class LocalClient(SuggestionClient):
                     name=state.cfg.name, budget=state.cfg.budget,
                     observations=state.observed, failures=state.failures,
                     pending=len(state.pending),
-                    best=best.to_json() if best else None)
+                    best=_public_best(best))
         return self._status_from_store(exp_id)
 
     def _status_from_store(self, exp_id: str) -> StatusResponse:
@@ -191,7 +209,7 @@ class LocalClient(SuggestionClient):
             exp_id=exp_id, state=st.get("state", "pending"), name=cfg.name,
             budget=cfg.budget, observations=len(obs),
             failures=sum(1 for o in obs if o.failed), pending=0,
-            best=best.to_json() if best else None)
+            best=_public_best(best))
 
     def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
         with self._lock:
@@ -199,6 +217,8 @@ class LocalClient(SuggestionClient):
         if exp is not None:
             with exp.lock:
                 exp.stopped = True
+                for s in exp.pending.values():
+                    exp.optimizer.forget(s.assignment)
                 exp.pending.clear()
         elif not (self.store.exp_dir(exp_id) / "config.json").exists():
             raise ApiError(E_UNKNOWN_EXPERIMENT, f"no experiment {exp_id!r}")

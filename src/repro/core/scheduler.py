@@ -38,6 +38,7 @@ from repro.api.client import SuggestionClient
 from repro.api.protocol import ApiError, ObserveRequest
 from repro.core.cluster import Cluster, SliceLease
 from repro.core.experiment import ExperimentConfig, TrialSpec
+from repro.core.space import strip_internal
 from repro.core.store import Store
 from repro.core.suggest import ASHA
 
@@ -105,7 +106,10 @@ class Scheduler:
         self.asha = ASHA(goal=cfg.goal, **cfg.early_stop) \
             if cfg.early_stop else None
         self._stop = threading.Event()
+        self._wake = threading.Event()          # set by future done-callbacks
         self._lock = threading.Lock()
+        self._status_interval = 0.2             # min seconds between mirrors
+        self._last_status_write = 0.0
         self._running: Dict[str, _Running] = {}
         self._requeue: List[TrialSpec] = []
         self._done_values: List[float] = []     # runtimes of completions
@@ -127,6 +131,7 @@ class Scheduler:
     def stop(self) -> None:
         """Terminate all executions (paper §2.5 / `delete` verb)."""
         self._stop.set()
+        self._wake.set()
         for r in list(self._running.values()):
             r.stop_flag.set()
 
@@ -154,26 +159,38 @@ class Scheduler:
             idle = 0
             while (self._observations < self.cfg.budget
                    and not self._stop.is_set()):
+                # event-driven tick: trial completions wake the loop via
+                # future done-callbacks; the timeout only paces straggler
+                # checks, suggest backoff retries, and idle re-sync.
+                # Harvest BEFORE filling so a completion frees its slot in
+                # the same tick (fill-first would idle a slot for a full
+                # wait timeout after every completion).
+                self._wake.clear()
+                self._harvest()
                 self._fill_slots(pool)
                 self._maybe_speculate(pool)
-                self._harvest()
                 if not self._running and not self._requeue:
                     # other workers may hold the remaining budget, or the
                     # experiment may have been stopped service-side: re-sync
                     idle += 1
-                    if idle % 20 == 0:
+                    if idle % 2 == 0:
+                        st = None
                         try:
                             st = self.client.status(self.exp_id)
                         except ApiError:
-                            continue    # service blip; keep waiting
-                        self._observations = max(self._observations,
-                                                 st.observations)
-                        self._failures = max(self._failures, st.failures)
-                        if st.state in ("stopped", "deleted"):
-                            self._stop.set()
+                            pass        # service blip; keep waiting
+                        if st is not None:
+                            self._observations = max(self._observations,
+                                                     st.observations)
+                            self._failures = max(self._failures, st.failures)
+                            if st.state in ("stopped", "deleted"):
+                                self._stop.set()
                 else:
                     idle = 0
-                time.sleep(0.005)
+                if (self._observations >= self.cfg.budget
+                        or self._stop.is_set()):
+                    break       # don't sleep a tick just to re-test the loop
+                self._wake.wait(0.05)
         finally:
             self.stop()
             # drain
@@ -195,6 +212,7 @@ class Scheduler:
             state="complete" if not self._stop.is_set() or
             self._observations >= self.cfg.budget else "stopped",
             observations=self._observations, failures=self._failures,
+            running=self._in_flight(),   # pool is drained: normally 0
             best=(best.to_json() if best else None))
         return status
 
@@ -260,15 +278,14 @@ class Scheduler:
                      else "continue"),
             _should_stop=stop_flag.is_set)
         fut = pool.submit(self._run_trial, spec, ctx)
+        fut.add_done_callback(lambda _f: self._wake.set())
         self._running[run_id] = _Running(spec, fut, lease, time.time(),
                                          stop_flag, speculative_of)
         return True
 
     def _run_trial(self, spec: TrialSpec, ctx: TrialContext):
-        ctx.log(f"start attempt={spec.attempt} "
-                f"assignment={ {k: v for k, v in spec.assignment.items() if not k.startswith('__')} }")
-        clean = {k: v for k, v in spec.assignment.items()
-                 if not k.startswith("__")}
+        clean = strip_internal(spec.assignment)
+        ctx.log(f"start attempt={spec.attempt} assignment={clean}")
         value = self.trial_fn(clean, ctx)
         ctx.log(f"done value={value}")
         return value
@@ -353,6 +370,18 @@ class Scheduler:
         except ApiError:
             pass    # experiment already stopped/deleted service-side
 
+    def _write_status(self, force: bool = False) -> None:
+        """Mirror progress into status.json at most once per harvest pass
+        and no more often than ``_status_interval`` (the run-final write is
+        forced, so the mirror always converges)."""
+        now = time.monotonic()
+        if not force and now - self._last_status_write < self._status_interval:
+            return
+        self._last_status_write = now
+        self.store.update_status(
+            self.exp_id, observations=self._observations,
+            failures=self._failures, running=self._in_flight())
+
     def _harvest(self, final: bool = False) -> None:
         done = [(rid, r) for rid, r in self._running.items()
                 if r.future.done()]
@@ -420,6 +449,5 @@ class Scheduler:
                 self._observe(r.spec, origin, None, failed=True,
                               metadata={"trial_id": origin,
                                         "reason": err[1]})
-            self.store.update_status(
-                self.exp_id, observations=self._observations,
-                failures=self._failures, running=self._in_flight())
+        if done:
+            self._write_status(force=final)

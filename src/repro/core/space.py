@@ -17,6 +17,12 @@ import numpy as np
 Assignment = Dict[str, Any]
 
 
+def strip_internal(a: Assignment) -> Assignment:
+    """Drop optimizer-internal ``__``-prefixed echo keys (constant-liar
+    tokens, particle ids, ...) — the user-facing view of an assignment."""
+    return {k: v for k, v in a.items() if not k.startswith("__")}
+
+
 @dataclass(frozen=True)
 class Param:
     name: str

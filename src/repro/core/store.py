@@ -11,17 +11,20 @@ Layout (JSON/JSONL; append-only observation log is crash-safe):
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import pathlib
 import threading
 import time
-from typing import Any, Dict, Iterator, List, Optional
+from typing import Any, Dict, Iterator, List, Optional, TextIO, Tuple
 
 from repro.core.experiment import ExperimentConfig
 from repro.core.suggest.base import Observation
 
 DEFAULT_ROOT = ".orchestrate"
+
+LOG_HANDLE_CACHE = 64           # max simultaneously-open trial log files
 
 
 class Store:
@@ -29,7 +32,18 @@ class Store:
         self.root = pathlib.Path(root)
         (self.root / "experiments").mkdir(parents=True, exist_ok=True)
         (self.root / "clusters").mkdir(parents=True, exist_ok=True)
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
+        # status fast path: cache the serialized status.json keyed by
+        # (mtime_ns, size, inode) so repeated read-modify-writes skip disk
+        # reads but still see writes from other processes sharing the
+        # root — set_status os.replace()s a fresh tmp file, so the inode
+        # changes even for same-size rewrites within mtime granularity
+        self._status_cache: Dict[str, Tuple[Tuple[int, int, int], str]] = {}
+        # log fast path: bounded LRU of open append handles (one syscall
+        # per line instead of an open/write/close triplet)
+        self._log_lock = threading.Lock()
+        self._log_handles: "collections.OrderedDict[pathlib.Path, TextIO]" \
+            = collections.OrderedDict()
 
     # ----------------------------------------------------------- experiments
     def exp_dir(self, exp_id: str) -> pathlib.Path:
@@ -48,18 +62,41 @@ class Store:
     def set_status(self, exp_id: str, status: Dict[str, Any]) -> None:
         p = self.exp_dir(exp_id) / "status.json"
         tmp = p.with_suffix(".tmp")
+        text = json.dumps(status, indent=1)
         with self._lock:
-            tmp.write_text(json.dumps(status, indent=1))
+            tmp.write_text(text)
+            try:
+                # stat the tmp file BEFORE the rename: os.replace keeps
+                # its inode/mtime/size, and stat-ing p afterwards could
+                # pair our text with a concurrent process's newer file
+                st = os.stat(tmp)
+                self._status_cache[exp_id] = (
+                    (st.st_mtime_ns, st.st_size, st.st_ino), text)
+            except OSError:
+                self._status_cache.pop(exp_id, None)
             os.replace(tmp, p)  # atomic
 
     def get_status(self, exp_id: str) -> Dict[str, Any]:
         p = self.exp_dir(exp_id) / "status.json"
-        return json.loads(p.read_text()) if p.exists() else {}
+        with self._lock:
+            try:
+                st = os.stat(p)
+            except OSError:
+                self._status_cache.pop(exp_id, None)
+                return {}
+            key = (st.st_mtime_ns, st.st_size, st.st_ino)
+            cached = self._status_cache.get(exp_id)
+            if cached is not None and cached[0] == key:
+                return json.loads(cached[1])
+            text = p.read_text()
+            self._status_cache[exp_id] = (key, text)
+            return json.loads(text)
 
     def update_status(self, exp_id: str, **fields) -> Dict[str, Any]:
-        st = self.get_status(exp_id)
-        st.update(fields)
-        self.set_status(exp_id, st)
+        with self._lock:   # atomic read-modify-write across threads
+            st = self.get_status(exp_id)
+            st.update(fields)
+            self.set_status(exp_id, st)
         return st
 
     def list_experiments(self) -> List[str]:
@@ -92,8 +129,37 @@ class Store:
 
     def append_log(self, exp_id: str, trial_id: str, line: str) -> None:
         p = self.log_path(exp_id, trial_id)
-        with open(p, "a") as f:
+        with self._log_lock:
+            f = self._log_handles.get(p)
+            if f is None or f.closed:
+                f = open(p, "a")
+                self._log_handles[p] = f
+                while len(self._log_handles) > LOG_HANDLE_CACHE:
+                    _, old = self._log_handles.popitem(last=False)
+                    try:
+                        old.close()
+                    except OSError:
+                        pass
+            else:
+                self._log_handles.move_to_end(p)
             f.write(line.rstrip("\n") + "\n")
+            f.flush()   # tail/iter_logs readers must see every line
+
+    def close_logs(self) -> None:
+        """Flush and close all cached trial-log handles."""
+        with self._log_lock:
+            for f in self._log_handles.values():
+                try:
+                    f.close()
+                except OSError:
+                    pass
+            self._log_handles.clear()
+
+    def __del__(self):
+        try:
+            self.close_logs()
+        except Exception:
+            pass
 
     def iter_logs(self, exp_id: str, follow: bool = False,
                   poll: float = 0.2, stop=None) -> Iterator[str]:

@@ -55,6 +55,11 @@ class Optimizer(abc.ABC):
     def _update(self, observations: Sequence[Observation]) -> None:
         pass
 
+    def forget(self, assignment: Assignment) -> None:
+        """A previously-asked suggestion will never be observed (released
+        back to the budget / experiment stopped): optimizers may drop any
+        per-suggestion bookkeeping (e.g. constant-liar lies)."""
+
     # ------------------------------------------------------------ helpers
     @property
     def successes(self) -> List[Observation]:

@@ -7,16 +7,27 @@ accepted point is added as a pseudo-observation at the current posterior
 mean ("constant liar"), so simultaneous workers spread out instead of
 piling onto the same optimum — the core requirement for the paper's
 "multiple model configurations simultaneously" workflow.
+
+Hot-path contract (ISSUE 2): ask(n) performs **at most one** hyperparameter
+fit per batch — warm-started from the previous optimum — then selects the
+whole batch with ``gp.select_batch`` (one jitted q-EI scan with rank-1
+constant-liar updates, O(n²) per lie instead of a full refit per point).
+Pending lies are keyed by a ``__lie`` token carried in the assignment, so
+near-identical suggestions (speculative twins, densified local candidates)
+always retire the *right* lie.
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+import uuid
+from typing import Dict, List, Sequence
 
 import numpy as np
 
-from repro.core.space import Assignment, Space
+from repro.core.space import Assignment, Space, strip_internal as _clean
 from repro.core.suggest import gp
 from repro.core.suggest.base import Observation, Optimizer, register
+
+LIE_KEY = "__lie"
 
 
 @register("gp")
@@ -24,78 +35,173 @@ from repro.core.suggest.base import Observation, Optimizer, register
 class BayesOpt(Optimizer):
     def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
                  candidates: int = 1024, fit_steps: int = 150,
-                 refit_every: int = 1):
+                 warm_fit_steps: int = 40, refit_every: int = 4):
         super().__init__(space, seed)
         self.n_init = n_init
         self.n_candidates = candidates
         self.fit_steps = fit_steps
+        self.warm_fit_steps = warm_fit_steps
         self.refit_every = refit_every
         self._post = None
+        self._params = None                    # warm-start hyperparameters
         self._since_fit = 0
-        self._pending: List[np.ndarray] = []   # constant-liar points
+        self._needs_fit = True
+        self._needs_recondition = False
+        self._n_in_post = 0                    # real + lie rows in posterior
+        self._pending: Dict[str, np.ndarray] = {}   # lie key -> unit coords
+        # per-instance nonce: a stale token from a pre-restart in-flight
+        # trial must never collide with this incarnation's keys
+        self._lie_nonce = uuid.uuid4().hex[:8]
+        self._lie_seq = 0
+        self._xs: List[np.ndarray] = []        # unit coords of successes
+        self._ys: List[float] = []
 
     # ------------------------------------------------------------------
-    def _design_matrix(self):
-        xs, ys = [], []
-        for o in self.successes:
-            xs.append(self.space.to_unit(
-                {k: v for k, v in o.assignment.items()
-                 if not k.startswith("__")}))
-            ys.append(o.value)
-        return np.array(xs), np.array(ys)
+    def _new_lie(self, u: np.ndarray) -> str:
+        self._lie_seq += 1
+        key = f"lie-{self._lie_nonce}-{self._lie_seq:05d}"
+        self._pending[key] = np.asarray(u, float)
+        return key
 
-    def _refit(self):
-        x, y = self._design_matrix()
-        if len(x) < max(2, len(self.space)):
+    def _free_slots(self) -> int:
+        if self._post is None:
+            return 0
+        return self._post.capacity - self._n_in_post
+
+    def _refit(self, extra: int = 0) -> None:
+        """One (warm-started) hyperparameter fit sized so the bucket can
+        absorb all pending lies plus ``extra`` upcoming picks, then rank-1
+        re-folds of the pending lies.  The only O(steps·n³) call on the
+        ask path."""
+        if len(self._ys) < max(2, len(self.space)):
             self._post = None
             return
-        # constant liar: pending suggestions pinned at the posterior mean
-        if self._pending and self._post is not None:
-            lie_mu, _ = gp.predict(self._post, np.array(self._pending))
-            x = np.concatenate([x, np.array(self._pending)], axis=0)
-            y = np.concatenate([y, np.asarray(lie_mu)])
-        self._post = gp.fit_gp(x, y, steps=self.fit_steps)
+        x = np.asarray(self._xs)
+        y = np.asarray(self._ys)
+        bucket = gp.bucket_size(len(x) + len(self._pending) + extra)
+        steps = (self.warm_fit_steps if self._params is not None
+                 else self.fit_steps)
+        post = gp.fit_gp(x, y, steps=steps, params0=self._params,
+                         bucket=bucket)
+        self._params = post.params
+        for u in self._pending.values():
+            post = gp.append_lie(post, np.asarray(u, np.float32))
+        self._post = post
+        self._n_in_post = len(x) + len(self._pending)
+        self._needs_fit = False
+        self._needs_recondition = False
+        self._since_fit = 0
+
+    def _recondition(self, extra: int = 0) -> None:
+        """Exact posterior rebuild at the *current* hyperparameters (one
+        O(b³) Cholesky, no Adam) — drops stale constant-liar rows and
+        folds the pending set back in.  The cheap path between the
+        every-``refit_every``-observations hyperparameter fits."""
+        if self._params is None:
+            self._refit(extra=extra)
+            return
+        x = np.asarray(self._xs)
+        y = np.asarray(self._ys)
+        bucket = gp.bucket_size(len(x) + len(self._pending) + extra)
+        post = gp.make_posterior(self._params, x, y, bucket=bucket)
+        for u in self._pending.values():
+            post = gp.append_lie(post, np.asarray(u, np.float32))
+        self._post = post
+        self._n_in_post = len(x) + len(self._pending)
+        self._needs_recondition = False
 
     def ask(self, n: int = 1) -> List[Assignment]:
+        n = int(n)
+        if n <= 0:
+            return []
+        if len(self._ys) < max(self.n_init, 2, len(self.space)):
+            return self._ask_random(n)
+        if self._post is None or self._needs_fit:
+            self._refit(extra=n)
+        elif self._needs_recondition or self._free_slots() < n:
+            self._recondition(extra=n)
+        if self._post is None:
+            return self._ask_random(n)
+        cand = self._candidates()
+        best_y = np.float32(max(self._ys))
+        picks, post = gp.select_batch(self._post, cand, best_y, n)
+        self._post = post
+        self._n_in_post += n
         out = []
-        for _ in range(n):
-            if len(self.successes) < self.n_init or self._post is None:
-                a = self.space.sample(self.rng, 1)[0]
-                self._pending.append(self.space.to_unit(a))
-                out.append(a)
-                continue
-            cand = self._candidates()
-            best_y = max(o.value for o in self.successes)
-            ei = np.asarray(gp.expected_improvement(
-                self._post, cand, np.float32(best_y)))
-            pick = cand[int(np.argmax(ei))]
-            self._pending.append(np.array(pick))
-            self._refit()                       # fold the lie in
-            out.append(self.space.from_unit(np.asarray(pick)))
+        for j in np.asarray(picks):
+            u = np.asarray(cand[int(j)], float)
+            a = self.space.from_unit(u)
+            a[LIE_KEY] = self._new_lie(u)
+            out.append(a)
+        return out
+
+    def _ask_random(self, n: int) -> List[Assignment]:
+        out = []
+        for a in self.space.sample(self.rng, n):
+            a[LIE_KEY] = self._new_lie(self.space.to_unit(_clean(a)))
+            out.append(a)
         return out
 
     def _candidates(self) -> np.ndarray:
         d = len(self.space)
         cand = self.rng.uniform(size=(self.n_candidates, d))
-        # densify around the incumbent (local exploitation pool)
-        inc = self.space.to_unit(
-            {k: v for k, v in self.best().assignment.items()
-             if not k.startswith("__")})
+        # densify around the incumbent (local exploitation pool); the
+        # total is a fixed shape so the q-EI scan compiles once per bucket
+        inc = self._xs[int(np.argmax(self._ys))]
         local = np.clip(inc[None] + self.rng.normal(
             0, 0.08, size=(self.n_candidates // 4, d)), 0, 1)
         return np.concatenate([cand, local], axis=0).astype(np.float32)
 
+    def _retire_lie(self, o: Observation) -> bool:
+        """Remove the observation's pending lie; True if one was retired."""
+        key = None
+        if isinstance(o.assignment, dict):
+            key = o.assignment.get(LIE_KEY)
+        if key is None and o.metadata:
+            key = o.metadata.get(LIE_KEY)
+        if key is not None:
+            return self._pending.pop(key, None) is not None
+        # legacy observations without a lie token: nearest-match fallback
+        u = self.space.to_unit(_clean(o.assignment))
+        for k, pend in self._pending.items():
+            if np.allclose(pend, u, atol=1e-6):
+                del self._pending[k]
+                return True
+        return False
+
+    def forget(self, assignment: Assignment) -> None:
+        """Retire the lie of a suggestion that will never be observed
+        (released / stopped), so it stops suppressing EI at that point."""
+        if self._retire_lie(Observation(assignment, None)) \
+                and self._post is not None:
+            self._needs_recondition = True
+
     def _update(self, observations: Sequence[Observation]) -> None:
-        # retire matching pending lies
         for o in observations:
-            u = self.space.to_unit(
-                {k: v for k, v in o.assignment.items()
-                 if not k.startswith("__")})
-            for i, pend in enumerate(self._pending):
-                if np.allclose(pend, u, atol=1e-6):
-                    self._pending.pop(i)
-                    break
+            retired = self._retire_lie(o)
+            if retired and self._post is not None:
+                # the retired lie's row is folded into the posterior; a
+                # rank-1 *removal* isn't worth the downdate, so rebuild
+                # (cheaply, at current hyperparameters) on the next ask
+                # instead of conditioning on both the stale lie and the
+                # real value for the same point
+                self._needs_recondition = True
+            if (not o.failed and o.value is not None
+                    and np.isfinite(o.value)):
+                u = self.space.to_unit(_clean(o.assignment))
+                self._xs.append(u)
+                self._ys.append(float(o.value))
+                if (not retired and self._post is not None
+                        and not self._needs_recondition and not self._needs_fit
+                        and self._free_slots() >= 1):
+                    # lie-free observation (restore replay / external
+                    # tell): exact rank-1 fold, no rebuild needed
+                    self._post = gp.append_point(
+                        self._post, np.asarray(u, np.float32),
+                        np.float32(o.value))
+                    self._n_in_post += 1
+                elif not retired:
+                    self._needs_recondition = True
         self._since_fit += len(observations)
         if self._since_fit >= self.refit_every:
-            self._since_fit = 0
-            self._refit()
+            self._needs_fit = True

@@ -3,17 +3,47 @@
 This is the numerical heart of the Bayesian optimizer — the in-repo stand-in
 for SigOpt's hosted service.  Hyperparameters (per-dim lengthscales, signal
 amplitude, noise) are fit by maximizing the exact log marginal likelihood
-with Adam; posteriors use a jitter-stabilized Cholesky.  Everything is jit
-compiled and sized for HPO workloads (n <= a few hundred observations).
+with Adam; posteriors use a jitter-stabilized Cholesky.
+
+Hot-path design (the suggestion service calls this once per `ask` batch):
+
+* **Bucketed static shapes** — training sets are padded to power-of-two
+  buckets with a 0/1 mask, so every jitted function sees one shape per
+  bucket and XLA compiles once per bucket instead of once per observation
+  count.  Padded slots carry an identity block in the covariance, which
+  makes the masked Cholesky exactly the real Cholesky plus identity rows.
+* **Rank-1 appends** — ``append_point`` / ``append_lie`` grow the posterior
+  into a free padded slot with a bordered-Cholesky update: O(n²) per point
+  instead of a fresh O(steps·n³) hyperparameter fit.  Constant-liar
+  batching in ``BayesOpt`` rides on this.
+* **Batched q-EI selection** — ``select_batch`` picks a whole batch of
+  suggestions in one jitted scan (EI argmax → fold lie → repeat), so the
+  per-point Python/dispatch overhead vanishes.
+* **Warm starts** — ``fit_gp(..., params0=...)`` resumes Adam from the
+  previous optimum so converged posteriors need far fewer steps.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+MIN_BUCKET = 16
+
+
+def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two bucket >= n (>= minimum)."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+def _dtype():
+    return jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
 
 
 class GPParams(NamedTuple):
@@ -24,11 +54,17 @@ class GPParams(NamedTuple):
 
 class GPPosterior(NamedTuple):
     params: GPParams
-    x: jnp.ndarray            # (n,d) training inputs (unit cube)
-    chol: jnp.ndarray         # (n,n) cholesky of K + noise
-    alpha: jnp.ndarray        # (n,) K^{-1} (y - mean)
+    x: jnp.ndarray            # (b,d) training inputs, padded to bucket
+    mask: jnp.ndarray         # (b,) 1.0 for real rows, 0.0 for padding
+    y: jnp.ndarray            # (b,) normalized targets (0 at padding)
+    chol: jnp.ndarray         # (b,b) cholesky of masked K + noise
+    alpha: jnp.ndarray        # (b,) K^{-1} y
     y_mean: jnp.ndarray       # ()
     y_std: jnp.ndarray        # ()
+
+    @property
+    def capacity(self) -> int:
+        return int(self.x.shape[0])
 
 
 def _sqdist(a: jnp.ndarray, b: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
@@ -47,24 +83,41 @@ def matern52(a, b, params: GPParams) -> jnp.ndarray:
     return amp2 * (1 + s5r + 5.0 / 3.0 * r * r) * jnp.exp(-s5r)
 
 
+def _noise2(params: GPParams) -> jnp.ndarray:
+    return jnp.exp(2 * params.log_noise) + 1e-5
+
+
+def _masked_cov(params: GPParams, x: jnp.ndarray,
+                mask: jnp.ndarray) -> jnp.ndarray:
+    """Covariance with padded rows/cols replaced by an identity block, so
+    cholesky(masked K) == blockdiag(cholesky(real K), I)."""
+    b = x.shape[0]
+    k = matern52(x, x, params) + _noise2(params) * jnp.eye(b)
+    mm = mask[:, None] * mask[None, :]
+    return k * mm + jnp.diag(1.0 - mask)
+
+
 @jax.jit
-def neg_mll(params: GPParams, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-    n = x.shape[0]
-    k = matern52(x, x, params)
-    k = k + (jnp.exp(2 * params.log_noise) + 1e-5) * jnp.eye(n)
+def neg_mll(params: GPParams, x: jnp.ndarray, y: jnp.ndarray,
+            mask: jnp.ndarray) -> jnp.ndarray:
+    """Exact negative log marginal likelihood over the masked rows only:
+    identity padding contributes log(1)=0 to the determinant and 0 to the
+    quadratic form, so the value is independent of the bucket size."""
+    k = _masked_cov(params, x, mask)
     chol = jnp.linalg.cholesky(k)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
-    return (0.5 * y @ alpha
+    ym = y * mask
+    alpha = jax.scipy.linalg.cho_solve((chol, True), ym)
+    return (0.5 * ym @ alpha
             + jnp.sum(jnp.log(jnp.diagonal(chol)))
-            + 0.5 * n * jnp.log(2 * jnp.pi))
+            + 0.5 * jnp.sum(mask) * jnp.log(2 * jnp.pi))
 
 
 @functools.partial(jax.jit, static_argnames=("steps",))
-def _fit(params0: GPParams, x, y, steps: int = 150, lr: float = 0.05):
+def _fit(params0: GPParams, x, y, mask, steps: int = 150, lr: float = 0.05):
     """Adam on the negative MLL."""
     def adam_step(carry, _):
         p, m, v, t = carry
-        g = jax.grad(neg_mll)(p, x, y)
+        g = jax.grad(neg_mll)(p, x, y, mask)
         t = t + 1
         m = jax.tree.map(lambda mm, gg: 0.9 * mm + 0.1 * gg, m, g)
         v = jax.tree.map(lambda vv, gg: 0.999 * vv + 0.001 * gg * gg, v, g)
@@ -90,33 +143,86 @@ def _fit(params0: GPParams, x, y, steps: int = 150, lr: float = 0.05):
     return p
 
 
-def fit_gp(x: np.ndarray, y: np.ndarray, steps: int = 150) -> GPPosterior:
-    """x in unit cube (n,d); y raw objective (normalized internally)."""
-    x = jnp.asarray(x, jnp.float64 if jax.config.read("jax_enable_x64")
-                    else jnp.float32)
-    y_raw = jnp.asarray(y, x.dtype)
-    y_mean = jnp.mean(y_raw)
-    y_std = jnp.maximum(jnp.std(y_raw), 1e-6)
-    yn = (y_raw - y_mean) / y_std
-    d = x.shape[1]
-    p0 = GPParams(jnp.zeros(d) - 0.7, jnp.zeros(()), jnp.zeros(()) - 2.0)
-    p = _fit(p0, x, yn, steps=steps)
-    n = x.shape[0]
-    k = matern52(x, x, p) + (jnp.exp(2 * p.log_noise) + 1e-5) * jnp.eye(n)
+@jax.jit
+def _posterior(params: GPParams, x, y, mask, y_mean, y_std) -> GPPosterior:
+    k = _masked_cov(params, x, mask)
     chol = jnp.linalg.cholesky(k)
-    alpha = jax.scipy.linalg.cho_solve((chol, True), yn)
-    return GPPosterior(p, x, chol, alpha, y_mean, y_std)
+    ym = y * mask
+    alpha = jax.scipy.linalg.cho_solve((chol, True), ym)
+    return GPPosterior(params, x, mask, ym, chol, alpha, y_mean, y_std)
 
 
+def _pad(x: np.ndarray, y: np.ndarray, bucket: int, dtype):
+    # pad on the host: device-side .at[:n].set would compile a fresh
+    # scatter for every distinct n, defeating the bucketing
+    n, d = x.shape
+    xp = np.zeros((bucket, d), np.float64)
+    xp[:n] = x
+    yp = np.zeros((bucket,), np.float64)
+    yp[:n] = y
+    mask = np.zeros((bucket,), np.float64)
+    mask[:n] = 1.0
+    return (jnp.asarray(xp, dtype), jnp.asarray(yp, dtype),
+            jnp.asarray(mask, dtype))
+
+
+def fit_gp(x: np.ndarray, y: np.ndarray, steps: int = 150,
+           params0: Optional[GPParams] = None,
+           bucket: Optional[int] = None) -> GPPosterior:
+    """x in unit cube (n,d); y raw objective (normalized internally).
+
+    ``bucket`` pads the training set to a static shape (default: smallest
+    power-of-two bucket); ``params0`` warm-starts Adam from a previous fit.
+    """
+    dtype = _dtype()
+    x = np.asarray(x, np.float64)
+    y_raw = np.asarray(y, np.float64)
+    n, d = x.shape
+    b = bucket_size(n) if bucket is None else int(bucket)
+    if b < n:
+        raise ValueError(f"bucket {b} smaller than training set {n}")
+    # normalize on the host: device ops on the unpadded (n,) array would
+    # compile per history size
+    mean = float(np.mean(y_raw))
+    std = max(float(np.std(y_raw)), 1e-6)
+    y_mean = jnp.asarray(mean, dtype)
+    y_std = jnp.asarray(std, dtype)
+    xp, ynp, mask = _pad(x, (y_raw - mean) / std, b, dtype)
+    if params0 is None:
+        p0 = GPParams(jnp.zeros(d, dtype) - 0.7, jnp.zeros((), dtype),
+                      jnp.zeros((), dtype) - 2.0)
+    else:
+        p0 = jax.tree.map(lambda a: jnp.asarray(a, dtype), params0)
+    p = _fit(p0, xp, ynp, mask, steps=steps)
+    return _posterior(p, xp, ynp, mask, y_mean, y_std)
+
+
+def make_posterior(params: GPParams, x: np.ndarray, y: np.ndarray,
+                   y_mean=None, y_std=None,
+                   bucket: Optional[int] = None) -> GPPosterior:
+    """Exact posterior for *given* hyperparameters (no fitting) — the
+    reference implementation the rank-1 update path is tested against."""
+    dtype = _dtype()
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    b = bucket_size(x.shape[0]) if bucket is None else int(bucket)
+    mean = float(np.mean(y) if y_mean is None else y_mean)
+    std = max(float(np.std(y) if y_std is None else y_std), 1e-6)
+    xp, ynp, mask = _pad(x, (y - mean) / std, b, dtype)
+    return _posterior(jax.tree.map(lambda a: jnp.asarray(a, dtype), params),
+                      xp, ynp, mask, jnp.asarray(mean, dtype),
+                      jnp.asarray(std, dtype))
+
+
+# ---------------------------------------------------------------- queries
 @jax.jit
 def predict(post: GPPosterior, xq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Posterior mean/stddev at query points (m,d) — in raw y units."""
-    kq = matern52(xq, post.x, post.params)                  # (m,n)
+    kq = matern52(xq, post.x, post.params) * post.mask[None, :]   # (m,b)
     mu = kq @ post.alpha
     v = jax.scipy.linalg.solve_triangular(post.chol, kq.T, lower=True)
-    var = jnp.maximum(
-        matern52(xq, xq, post.params).diagonal() - jnp.sum(v * v, axis=0),
-        1e-12)
+    amp2 = jnp.exp(2 * post.params.log_amp)
+    var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0), 1e-12)
     return (mu * post.y_std + post.y_mean,
             jnp.sqrt(var) * post.y_std)
 
@@ -129,3 +235,79 @@ def expected_improvement(post: GPPosterior, xq: jnp.ndarray,
     ncdf = 0.5 * (1 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
     npdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2 * jnp.pi)
     return (mu - best - xi) * ncdf + sd * npdf
+
+
+# ---------------------------------------------------------- rank-1 growth
+def _append_norm(post: GPPosterior, xn: jnp.ndarray,
+                 yn: jnp.ndarray) -> GPPosterior:
+    """Grow the posterior into the first free padded slot: bordered
+    Cholesky (new row [l12, l22]) + two triangular solves for alpha.
+    O(b²); hyperparameters and y-normalization are frozen.  Real rows
+    occupy a prefix, so the new point *is* the last real row and the
+    identity rows below it stay a valid Cholesky of the masked cov."""
+    idx = jnp.sum(post.mask).astype(jnp.int32)
+    kvec = (matern52(xn[None], post.x, post.params)[0] * post.mask)
+    l12 = jax.scipy.linalg.solve_triangular(post.chol, kvec, lower=True)
+    kss = jnp.exp(2 * post.params.log_amp) + _noise2(post.params)
+    l22 = jnp.sqrt(jnp.maximum(kss - l12 @ l12, 1e-10))
+    chol = post.chol.at[idx, :].set(l12.at[idx].set(l22))
+    x = post.x.at[idx].set(xn)
+    mask = post.mask.at[idx].set(1.0)
+    y = post.y.at[idx].set(yn)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return GPPosterior(post.params, x, mask, y, chol, alpha,
+                       post.y_mean, post.y_std)
+
+
+@jax.jit
+def append_point(post: GPPosterior, xn: jnp.ndarray,
+                 y_raw: jnp.ndarray) -> GPPosterior:
+    """Rank-1 fold of a real observation (raw y units)."""
+    return _append_norm(post, xn, (y_raw - post.y_mean) / post.y_std)
+
+
+@jax.jit
+def append_lie(post: GPPosterior, xn: jnp.ndarray) -> GPPosterior:
+    """Constant liar: pin a pending suggestion at its posterior mean."""
+    kvec = matern52(xn[None], post.x, post.params)[0] * post.mask
+    return _append_norm(post, xn, kvec @ post.alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def _select_scan(post: GPPosterior, cand: jnp.ndarray, best: jnp.ndarray,
+                 k: jnp.ndarray, k_pad: int):
+    """q-EI by sequential constant-liar greedy, fully inside one jitted
+    scan: argmax EI over the candidate pool, fold the pick in as a lie,
+    repeat.  The scan length is padded to ``k_pad`` (a power of two) with
+    the live count ``k`` traced, so varying batch sizes share one compile
+    per bucket; steps past ``k`` are computed then reverted wholesale."""
+    m = cand.shape[0]
+
+    def step(carry, i):
+        p, taken = carry
+        ei = expected_improvement(p, cand, best)
+        ei = jnp.where(taken, -jnp.inf, ei)
+        j = jnp.argmax(ei)
+        p2 = append_lie(p, cand[j])
+        live = i < k
+        p = jax.tree.map(lambda new, old: jnp.where(live, new, old), p2, p)
+        taken = jnp.where(live, taken.at[j].set(True), taken)
+        return (p, taken), j
+
+    (post, _), picks = jax.lax.scan(
+        step, (post, jnp.zeros((m,), bool)), jnp.arange(k_pad))
+    return picks, post
+
+
+def select_batch(post: GPPosterior, cand: jnp.ndarray, best,
+                 k: int) -> Tuple[jnp.ndarray, GPPosterior]:
+    """Pick k batch points by greedy q-EI with constant-liar updates in
+    one jitted pass.  Returns (picked candidate indices (k,), posterior
+    with the k lies folded in).  The posterior must have >= k free slots;
+    compiles once per (bucket, next-power-of-two(k))."""
+    k = int(k)
+    k_pad = 1 << max(0, k - 1).bit_length()
+    picks, post = _select_scan(post, jnp.asarray(cand),
+                               jnp.asarray(best, post.y_mean.dtype),
+                               jnp.asarray(k, jnp.int32), k_pad)
+    return picks[:k], post

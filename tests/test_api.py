@@ -72,6 +72,43 @@ def test_local_pending_tracking_caps_budget():
     assert len(client.suggest(exp, 2)) == 1
 
 
+def test_release_and_stop_retire_constant_liar_lies():
+    """A released (or stopped) GP suggestion must drop its pending lie —
+    otherwise every refit re-folds a point that will never be observed."""
+    client = LocalClient(tempfile.mkdtemp())
+    cfg = _cfg(budget=30, optimizer="gp",
+               optimizer_options={"n_init": 2, "fit_steps": 30})
+    exp = _create(client, cfg).exp_id
+    for i in range(4):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    state = client._exps[exp]
+    s = client.suggest(exp, 1).suggestions[0]
+    assert state.optimizer._pending, "asked suggestion should hold a lie"
+    client.release(exp, s.suggestion_id)
+    assert not state.optimizer._pending, "release must retire the lie"
+    client.suggest(exp, 2)
+    assert len(state.optimizer._pending) == 2
+    client.stop(exp)
+    assert not state.optimizer._pending, "stop must retire all lies"
+
+
+def test_best_readout_strips_internal_keys():
+    client = LocalClient(tempfile.mkdtemp())
+    cfg = _cfg(budget=20, optimizer="gp",
+               optimizer_options={"n_init": 2, "fit_steps": 30})
+    exp = _create(client, cfg).exp_id
+    for i in range(5):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    for best in (client.status(exp).best, client.best_response(exp).best):
+        assert best is not None
+        assert not any(k.startswith("__") for k in best["assignment"]), \
+            "internal echo keys must not leak into user-facing best"
+
+
 def test_local_concurrent_suggest_never_duplicates():
     client = LocalClient(tempfile.mkdtemp())
     exp = _create(client, _cfg(budget=64, parallel=8)).exp_id

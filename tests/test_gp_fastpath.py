@@ -1,0 +1,220 @@
+"""ISSUE 2 hot-path contracts: bucketed static shapes (no recompile within
+a bucket), rank-1 constant-liar updates vs full refit, one hyperparameter
+fit per ask(n) batch, keyed pending-lie retirement."""
+import numpy as np
+import pytest
+
+from repro.core.space import Param, Space
+from repro.core.suggest import Observation, make_optimizer
+from repro.core.suggest import gp
+from repro.core.suggest.bayesopt import LIE_KEY
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1),
+                  Param("y", "double", 1e-4, 1e0, log=True)])
+
+
+def _f(a):
+    return -((a["x"] - 0.62) ** 2 + (np.log10(a["y"]) + 2.0) ** 2)
+
+
+def _clean(a):
+    return {k: v for k, v in a.items() if not k.startswith("__")}
+
+
+# ------------------------------------------------------------------ buckets
+def test_bucket_size_powers_of_two():
+    assert gp.bucket_size(1) == gp.MIN_BUCKET
+    assert gp.bucket_size(gp.MIN_BUCKET) == gp.MIN_BUCKET
+    assert gp.bucket_size(gp.MIN_BUCKET + 1) == 2 * gp.MIN_BUCKET
+    assert gp.bucket_size(150) == 256
+
+
+def test_padding_does_not_change_the_posterior():
+    """Masked MLL/posterior must be invariant to the bucket size — the
+    identity padding block contributes nothing."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(size=(24, 2))
+    y = np.sin(4 * x[:, 0]) + 0.5 * x[:, 1]
+    q = rng.uniform(size=(16, 2)).astype(np.float32)
+    p_small = gp.fit_gp(x, y, steps=80)                # bucket 32
+    p_big = gp.fit_gp(x, y, steps=80, bucket=128)
+    mu1, sd1 = map(np.asarray, gp.predict(p_small, q))
+    mu2, sd2 = map(np.asarray, gp.predict(p_big, q))
+    np.testing.assert_allclose(mu1, mu2, atol=5e-4)
+    np.testing.assert_allclose(sd1, sd2, atol=5e-4)
+
+
+def test_no_recompile_within_bucket():
+    """A 10→150-observation sweep may compile each jitted GP function at
+    most once per shape bucket (the whole point of padding)."""
+    rng = np.random.default_rng(1)
+    x = rng.uniform(size=(150, 2))
+    y = np.sin(5 * x[:, 0]) + x[:, 1] + 0.05 * rng.normal(size=150)
+    q = rng.uniform(size=(8, 2)).astype(np.float32)
+    sizes = list(range(10, 151, 7))
+    buckets = {gp.bucket_size(n) for n in sizes}
+
+    before_fit = gp._fit._cache_size()
+    before_pred = gp.predict._cache_size()
+    before_ei = gp.expected_improvement._cache_size()
+    post = None
+    for n in sizes:
+        post = gp.fit_gp(x[:n], y[:n], steps=25)
+        gp.predict(post, q)
+        gp.expected_improvement(post, q, np.float32(y[:n].max()))
+    assert gp._fit._cache_size() - before_fit <= len(buckets)
+    assert gp.predict._cache_size() - before_pred <= len(buckets)
+    assert gp.expected_improvement._cache_size() - before_ei <= len(buckets)
+
+
+def test_select_batch_compiles_once_per_padded_k():
+    """Varying ask sizes must share compiles: the q-EI scan length is
+    padded to a power of two, so k in 1..8 costs at most 4 compiles per
+    bucket (k_pad in {1,2,4,8})."""
+    rng = np.random.default_rng(4)
+    x = rng.uniform(size=(20, 2))
+    y = np.sin(5 * x[:, 0]) + x[:, 1]
+    cand = rng.uniform(size=(64, 2)).astype(np.float32)
+    post = gp.fit_gp(x, y, steps=25, bucket=64)   # room for all the lies
+    before = gp._select_scan._cache_size()
+    for k in (1, 2, 3, 4, 5, 6, 7, 8):
+        picks, _ = gp.select_batch(post, cand, np.float32(y.max()), k)
+        assert len(picks) == k
+        assert len(set(np.asarray(picks).tolist())) == k
+    assert gp._select_scan._cache_size() - before <= 4
+
+
+# ------------------------------------------------------------- rank-1 path
+def test_rank1_append_matches_full_cholesky():
+    """Posterior grown by rank-1 appends must agree with the from-scratch
+    Cholesky at the same hyperparameters to <=1e-3 relative error."""
+    rng = np.random.default_rng(2)
+    x = rng.uniform(size=(28, 2))
+    y = np.sin(4 * x[:, 0]) + 0.5 * x[:, 1] + 0.1 * rng.normal(size=28)
+    post = gp.fit_gp(x[:20], y[:20], steps=120, bucket=32)
+    inc = post
+    for i in range(20, 28):
+        inc = gp.append_point(inc, np.asarray(x[i], np.float32),
+                              np.float32(y[i]))
+    ref = gp.make_posterior(post.params, x, y, y_mean=post.y_mean,
+                            y_std=post.y_std, bucket=32)
+    q = rng.uniform(size=(64, 2)).astype(np.float32)
+    mu_i, sd_i = map(np.asarray, gp.predict(inc, q))
+    mu_r, sd_r = map(np.asarray, gp.predict(ref, q))
+    assert np.linalg.norm(mu_i - mu_r) / np.linalg.norm(mu_r) <= 1e-3
+    assert np.linalg.norm(sd_i - sd_r) / np.linalg.norm(sd_r) <= 1e-3
+
+
+def test_append_lie_pins_posterior_mean():
+    rng = np.random.default_rng(3)
+    x = rng.uniform(size=(16, 2))
+    y = np.sin(3 * x[:, 0])
+    post = gp.fit_gp(x, y, steps=120, bucket=32)
+    xq = np.asarray([[0.3, 0.7]], np.float32)
+    mu_before, sd_before = map(np.asarray, gp.predict(post, xq))
+    lied = gp.append_lie(post, xq[0])
+    mu_after, sd_after = map(np.asarray, gp.predict(lied, xq))
+    # mean unchanged (the lie *is* the mean), uncertainty collapses
+    assert abs(float(mu_after[0] - mu_before[0])) < 5e-3
+    assert float(sd_after[0]) < float(sd_before[0])
+
+
+# --------------------------------------------------------------- ask batch
+def test_ask_batch_distinct_points_single_fit(monkeypatch):
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=4, fit_steps=60)
+    for _ in range(2):
+        asks = opt.ask(4)
+        opt.tell([Observation(a, _f(_clean(a))) for a in asks])
+
+    calls = []
+    real_fit = gp.fit_gp
+    monkeypatch.setattr(gp, "fit_gp", lambda *a, **kw:
+                        calls.append(kw.get("steps")) or real_fit(*a, **kw))
+    batch = opt.ask(6)
+    assert len(calls) == 1, "ask(n) must do exactly one hyperparameter fit"
+    assert len(batch) == 6
+    pts = np.array([space.to_unit(_clean(a)) for a in batch])
+    d = np.linalg.norm(pts[:, None] - pts[None], axis=-1)
+    np.fill_diagonal(d, 1.0)
+    assert d.min() > 1e-4, "batch points must be distinct"
+
+
+def test_warm_start_uses_fewer_steps(monkeypatch):
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=4, fit_steps=80,
+                         warm_fit_steps=20, refit_every=1)
+    steps_seen = []
+    real_fit = gp.fit_gp
+    monkeypatch.setattr(gp, "fit_gp", lambda *a, **kw:
+                        steps_seen.append(kw.get("steps"))
+                        or real_fit(*a, **kw))
+    for _ in range(3):
+        asks = opt.ask(3)
+        opt.tell([Observation(a, _f(_clean(a))) for a in asks])
+    opt.ask(1)
+    assert steps_seen[0] == 80, "cold fit runs the full step budget"
+    assert all(s == 20 for s in steps_seen[1:]), \
+        "warm-started fits run the reduced step budget"
+
+
+# ------------------------------------------------------------ pending lies
+def test_pending_lies_retired_by_key_not_coordinates():
+    """Two near-identical pending suggestions (speculative twins) must
+    retire independently — coordinate matching would pop the wrong one."""
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=2)
+    u = np.array([0.5, 0.5])
+    opt._pending = {"lie00001": u.copy(), "lie00002": u.copy()}
+    a = space.from_unit(u)
+    a[LIE_KEY] = "lie00002"
+    opt.tell([Observation(a, 1.0)])
+    assert "lie00001" in opt._pending
+    assert "lie00002" not in opt._pending
+
+
+def test_pending_lie_fallback_matches_legacy_observations():
+    """Observations without a lie token (old logs) still retire pending
+    lies by coordinate."""
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=2)
+    asks = opt.ask(2)
+    assert len(opt._pending) == 2
+    legacy = Observation(_clean(asks[0]), 0.5)     # token stripped
+    opt.tell([legacy])
+    assert len(opt._pending) == 1
+
+
+def test_ask_observe_loop_keeps_pending_bounded():
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=4)
+    for _ in range(6):
+        asks = opt.ask(3)
+        opt.tell([Observation(a, _f(_clean(a))) for a in asks])
+    assert not opt._pending, "observed suggestions must retire their lies"
+
+
+def test_recondition_between_fits_drops_stale_lies(monkeypatch):
+    """With refit_every>1, observes between hyperparameter fits rebuild
+    the posterior at the current hyperparameters (no Adam) and must not
+    condition on both a retired lie and its real observation."""
+    space = _space()
+    opt = make_optimizer("gp", space, seed=0, n_init=4, fit_steps=60,
+                         refit_every=100)    # hyperfit effectively once
+    for _ in range(2):
+        asks = opt.ask(4)
+        opt.tell([Observation(a, _f(_clean(a))) for a in asks])
+    opt.ask(2)                               # one fit happens here
+    calls = []
+    real_fit = gp.fit_gp
+    monkeypatch.setattr(gp, "fit_gp", lambda *a, **kw:
+                        calls.append(1) or real_fit(*a, **kw))
+    for _ in range(3):
+        asks = opt.ask(2)
+        opt.tell([Observation(a, _f(_clean(a))) for a in asks])
+    assert not calls, "between refits asks must recondition, not refit"
+    # posterior rows == real observations + pending lies, no stale lies
+    asks = opt.ask(1)
+    assert opt._n_in_post == len(opt._ys) + len(opt._pending)
