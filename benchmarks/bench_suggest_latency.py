@@ -17,7 +17,7 @@ import time
 import numpy as np
 
 from repro.api import CreateExperiment, HTTPClient, LocalClient, \
-    ObserveRequest, serve_api
+    ObserveRequest, ReportRequest, serve_api
 from repro.core.experiment import ExperimentConfig
 from repro.core.space import Param, Space, strip_internal
 from repro.core.suggest import Observation, make_optimizer
@@ -131,6 +131,32 @@ def run_service(n=50):
     return rows
 
 
+def _reports(client, n):
+    """n ctx.report round trips (metric append + shared-ASHA decision);
+    returns us per report."""
+    exp = client.create_experiment(CreateExperiment(config=ExperimentConfig(
+        name="bench-report", budget=10, parallel=1, optimizer="random",
+        space=_space(),
+        early_stop={"min_steps": 1, "eta": 3}).to_json())).exp_id
+    client.report(ReportRequest(exp, "t0001", 1, 0.5))       # warm
+    t0 = time.perf_counter()
+    for i in range(n):
+        client.report(ReportRequest(exp, "t0001", 2 + i, 0.5))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run_report(n=200):
+    """Trial-events overhead: [(backend, us_per_report_roundtrip)] — the
+    per-step cost a training loop pays for service-side early stopping."""
+    rows = [("report_local", _reports(LocalClient(tempfile.mkdtemp()), n))]
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        rows.append(("report_http", _reports(HTTPClient(server.url), n)))
+    finally:
+        server.shutdown()
+    return rows
+
+
 def main():
     print("# ask() latency vs history size")
     print("optimizer/history,us_per_call")
@@ -145,6 +171,9 @@ def main():
     print("# suggest+observe round trip through the service API")
     print("backend,us_per_roundtrip")
     for backend, us in run_service():
+        print(f"bench_service/{backend},{us:.0f}")
+    print("# trial-progress report round trip (metrics + ASHA decision)")
+    for backend, us in run_report():
         print(f"bench_service/{backend},{us:.0f}")
 
 

@@ -1,58 +1,62 @@
-"""Distributed HPO through the suggestion-service API (paper §2.1, §3.5).
+"""Distributed HPO through the suggestion-service API (paper §2.1, §2.5,
+§3.5).
 
-One process serves the experiment (optimizer + system-of-record store);
-any number of workers — on this host or others — drive the suggest/observe
-loop against it over HTTP.  This is the scenario the protocol exists for:
-the worker needs nothing but the service URL.
+One process serves the experiment (optimizer + shared ASHA early-stopping
+state + system-of-record store); any number of worker processes — on this
+host or others — drive full schedulers against it over HTTP.  Each trial
+streams intermediate metrics through ``ctx.report``, so pruning decisions
+come from ONE service-side rung table no matter which worker runs the
+trial, and a paused/stopped trial frees its slot for a better one.
 
 Run against a live service (started with ``repro serve-api --port 8765``):
 
-    python examples/remote_worker.py --service http://HOST:8765 --workers 4
+    python examples/remote_worker.py --service http://HOST:8765 --workers 2
 
 With no ``--service``, a demo service is started in-process first.
 
-See API.md for the full v1 protocol (endpoints, schemas, error codes).
+See API.md for the full v1 protocol (endpoints, schemas, error codes) and
+the "Trial events" section for report/decision semantics.
 """
 import argparse
 import tempfile
 import threading
 import time
 
-from repro.api import CreateExperiment, HTTPClient, ObserveRequest, serve_api
-from repro.core import ExperimentConfig, Param, Space
+from repro.api import CreateExperiment, HTTPClient, serve_api
+from repro.core import ExperimentConfig, Orchestrator, Param, Space
 
 
-def objective(a):
-    """Stand-in for a real training run (maximize)."""
-    return -(a["lr"] - 0.3) ** 2 - 0.1 * (a["depth"] - 8) ** 2
+def trial(a, ctx):
+    """Stand-in for a real training run: improves toward its asymptote
+    over 27 steps, reporting progress after each — the service answers
+    continue/stop/pause at every ASHA rung crossing."""
+    target = -(a["lr"] - 0.3) ** 2 - 0.1 * (a["depth"] - 8) ** 2
+    start = ctx.resume_step or 0        # paused trials resume mid-curve
+    for step in range(start + 1, 28):
+        time.sleep(0.002)               # "training"
+        value = target - (1.0 - step / 27.0)    # rises toward target
+        ctx.report(step, value)         # -> POST .../trials/{tid}/report
+    return target
 
 
-def worker_loop(url: str, exp_id: str, name: str) -> int:
-    """The entire worker contract: suggest -> evaluate -> observe."""
-    client = HTTPClient(url)
-    done = 0
-    while True:
-        batch = client.suggest(exp_id, 1)
-        if not batch.suggestions:
-            st = client.status(exp_id)
-            if (st.observations >= st.budget
-                    or st.state in ("complete", "stopped", "deleted")):
-                return done
-            time.sleep(0.02)    # others hold the remaining budget; retry
-            continue
-        s = batch.suggestions[0]
-        client.observe(ObserveRequest(
-            exp_id, s.suggestion_id, s.assignment,
-            value=objective(s.assignment), trial_id=name))
-        done += 1
+def _cfg(budget, parallel):
+    return ExperimentConfig(
+        name="remote-demo", budget=budget, parallel=parallel,
+        optimizer="random",
+        space=Space([Param("lr", "double", 1e-3, 1.0, log=True),
+                     Param("depth", "int", 2, 16)]),
+        early_stop={"min_steps": 3, "eta": 3})
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--service", default=None,
                     help="URL of a running `repro serve-api`")
-    ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--budget", type=int, default=32)
+    ap.add_argument("--workers", type=int, default=2,
+                    help="number of scheduler processes to emulate")
+    ap.add_argument("--parallel", type=int, default=2,
+                    help="parallel bandwidth per worker")
+    ap.add_argument("--budget", type=int, default=16)
     args = ap.parse_args()
 
     server = None
@@ -63,21 +67,23 @@ def main():
         print(f"demo service started at {url}")
 
     client = HTTPClient(url)
-    cfg = ExperimentConfig(
-        name="remote-demo", budget=args.budget, parallel=args.workers,
-        optimizer="random",
-        space=Space([Param("lr", "double", 1e-3, 1.0, log=True),
-                     Param("depth", "int", 2, 16)]))
+    cfg = _cfg(args.budget, args.parallel)
     exp_id = client.create_experiment(
         CreateExperiment(config=cfg.to_json())).exp_id
     print(f"experiment {exp_id}: budget={cfg.budget}, "
-          f"{args.workers} workers")
+          f"{args.workers} workers x {args.parallel} parallel, "
+          f"ASHA rungs start at step {cfg.early_stop['min_steps']}")
 
-    counts = {}
-    threads = [threading.Thread(
-        target=lambda i=i: counts.__setitem__(
-            i, worker_loop(url, exp_id, f"worker{i}")))
-        for i in range(args.workers)]
+    # each "worker" is a full scheduler with its own local store (trial
+    # logs + checkpoints stay worker-side; observations/metrics/rungs are
+    # service-side truth)
+    def run_worker(i):
+        orch = Orchestrator(tempfile.mkdtemp(prefix=f"worker{i}-"))
+        orch.run(_cfg(args.budget, args.parallel), trial_fn=trial,
+                 exp_id=exp_id, service=url)
+
+    threads = [threading.Thread(target=run_worker, args=(i,))
+               for i in range(args.workers)]
     for t in threads:
         t.start()
     for t in threads:
@@ -85,8 +91,11 @@ def main():
 
     st = client.status(exp_id)
     best = client.best(exp_id)
-    print(f"done: {st.observations} observations "
-          f"({', '.join(f'worker{i}: {n}' for i, n in sorted(counts.items()))})")
+    obs = server.backend.store.load_observations(exp_id) if server else None
+    print(f"done: {st.observations} observations")
+    if obs is not None:
+        pruned = sum(1 for o in obs if o.metadata.get("pruned"))
+        print(f"early-stopped (service-side shared ASHA): {pruned}")
     print(f"best value {best.value:.4f} at {best.assignment}")
     if server is not None:
         server.shutdown()

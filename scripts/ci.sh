@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 correctness, then the tier-2 perf gate.
+#
+#   scripts/ci.sh            # pytest -x -q && bench_check (non-zero on fail)
+#
+# ROADMAP.md documents both tiers.  Run on an otherwise idle machine:
+# CPU contention alone inflates perf rows ~2x (the gate tolerates 3x).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== tier-2: perf gate =="
+python scripts/bench_check.py

@@ -1,19 +1,23 @@
-# Suggestion-service API (v1): the typed suggest/observe boundary between
-# trial execution and the optimizer + system-of-record store.  See API.md.
+# Suggestion-service API (v1): the typed suggest/observe/report boundary
+# between trial execution and the optimizer + system-of-record store.
+# See API.md.
 from repro.api.client import SuggestionClient
 from repro.api.http import ApiServer, HTTPClient, serve_api
 from repro.api.local import LocalClient
-from repro.api.protocol import (ApiError, BestRequest, BestResponse,
-                                CreateExperiment, CreateResponse,
-                                ObserveRequest, ObserveResponse,
-                                PROTOCOL_VERSION, ReleaseRequest,
-                                ReleaseResponse, StatusRequest,
-                                StatusResponse, StopRequest, SuggestBatch,
-                                Suggestion, SuggestRequest)
+from repro.api.protocol import (DECISION_CONTINUE, DECISION_PAUSE,
+                                DECISION_STOP, ApiError, BestRequest,
+                                BestResponse, CreateExperiment,
+                                CreateResponse, Decision, ObserveRequest,
+                                ObserveResponse, PROTOCOL_VERSION,
+                                ReleaseRequest, ReleaseResponse,
+                                ReportRequest, StatusRequest, StatusResponse,
+                                StopRequest, SuggestBatch, Suggestion,
+                                SuggestRequest)
 
 __all__ = ["SuggestionClient", "LocalClient", "HTTPClient", "ApiServer",
            "serve_api", "ApiError", "PROTOCOL_VERSION", "CreateExperiment",
            "CreateResponse", "Suggestion", "SuggestRequest", "SuggestBatch",
-           "ObserveRequest", "ObserveResponse", "ReleaseRequest",
-           "ReleaseResponse", "StatusRequest", "StatusResponse",
-           "StopRequest", "BestRequest", "BestResponse"]
+           "ObserveRequest", "ObserveResponse", "ReportRequest", "Decision",
+           "DECISION_CONTINUE", "DECISION_STOP", "DECISION_PAUSE",
+           "ReleaseRequest", "ReleaseResponse", "StatusRequest",
+           "StatusResponse", "StopRequest", "BestRequest", "BestResponse"]

@@ -14,8 +14,9 @@ import abc
 from typing import TYPE_CHECKING, Optional
 
 from repro.api.protocol import (BestResponse, CreateExperiment,
-                                CreateResponse, ObserveRequest,
-                                ObserveResponse, StatusResponse, SuggestBatch)
+                                CreateResponse, Decision, ObserveRequest,
+                                ObserveResponse, ReportRequest,
+                                StatusResponse, SuggestBatch)
 
 if TYPE_CHECKING:   # keep this module import-light: no repro.core at runtime
     from repro.core.suggest.base import Observation
@@ -41,6 +42,13 @@ class SuggestionClient(abc.ABC):
     def observe(self, req: ObserveRequest) -> ObserveResponse:
         """Report one suggestion's outcome.  First observe wins; later
         observes of the same suggestion_id come back ``duplicate=True``."""
+
+    @abc.abstractmethod
+    def report(self, req: ReportRequest) -> Decision:
+        """Stream one intermediate (step, value) progress point.  The
+        service persists it to the trial's metric log and answers with the
+        experiment-wide early-stopping decision (continue/stop/pause) —
+        ONE shared rung table for all workers of the experiment."""
 
     @abc.abstractmethod
     def release(self, exp_id: str, suggestion_id: str) -> bool:

@@ -12,6 +12,7 @@ Endpoint map (full schemas in API.md):
   GET  /v1/experiments/{id}                     status
   POST /v1/experiments/{id}/suggestions         suggest   {count}
   POST /v1/experiments/{id}/observations        observe
+  POST /v1/experiments/{id}/trials/{tid}/report report    {step, value}
   POST /v1/experiments/{id}/release             release   {suggestion_id}
   POST /v1/experiments/{id}/stop                stop      {state}
   GET  /v1/experiments/{id}/best                best
@@ -29,28 +30,35 @@ from typing import Optional, Tuple, Union
 from repro.api.client import SuggestionClient
 from repro.api.local import LocalClient
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
-                                CreateResponse, E_BAD_REQUEST, E_INTERNAL,
-                                ObserveRequest, ObserveResponse,
+                                CreateResponse, Decision, E_BAD_REQUEST,
+                                E_INTERNAL, ObserveRequest, ObserveResponse,
                                 PROTOCOL_VERSION, ReleaseRequest,
-                                ReleaseResponse, StatusResponse, StopRequest,
-                                SuggestBatch, SuggestRequest)
+                                ReleaseResponse, ReportRequest,
+                                StatusResponse, StopRequest, SuggestBatch,
+                                SuggestRequest)
 from repro.core.store import Store
 
 
 def _parse_path(path: str):
-    """-> (exp_id | None, action | None); raises ApiError on bad paths."""
+    """-> (exp_id | None, action | None, trial_id | None); raises ApiError
+    on bad paths.  ``trial_id`` is only set for the nested trial-events
+    route ``/v1/experiments/{id}/trials/{tid}/report``."""
     parts = [p for p in path.split("?")[0].split("/") if p]
     if parts == ["v1", "healthz"]:
-        return None, "healthz"
+        return None, "healthz", None
     if not parts or parts[0] != "v1" or len(parts) < 2 \
-            or parts[1] != "experiments" or len(parts) > 4:
+            or parts[1] != "experiments" or len(parts) > 6:
         raise ApiError(E_BAD_REQUEST, f"no route for {path!r}")
     exp_id = parts[2] if len(parts) > 2 else None
+    if len(parts) > 4:
+        if len(parts) != 6 or parts[3] != "trials" or parts[5] != "report":
+            raise ApiError(E_BAD_REQUEST, f"no route for {path!r}")
+        return exp_id, "report", parts[4]
     action = parts[3] if len(parts) > 3 else None
     if action not in (None, "suggestions", "observations", "release",
                       "stop", "best"):
         raise ApiError(E_BAD_REQUEST, f"unknown action {action!r}")
-    return exp_id, action
+    return exp_id, action, None
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -88,8 +96,8 @@ class _Handler(BaseHTTPRequestHandler):
     def _dispatch(self, method: str) -> None:
         self._body = None
         try:
-            exp_id, action = _parse_path(self.path)
-            self._send(200, self._route(method, exp_id, action))
+            exp_id, action, trial_id = _parse_path(self.path)
+            self._send(200, self._route(method, exp_id, action, trial_id))
         except ApiError as e:
             self._send(e.http_status, e.to_json())
         except Exception as e:  # noqa: service must answer, not die
@@ -99,7 +107,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._take_body()   # drain for keep-alive reuse
 
     def _route(self, method: str, exp_id: Optional[str],
-               action: Optional[str]) -> dict:
+               action: Optional[str],
+               trial_id: Optional[str] = None) -> dict:
         b = self.backend
         if action == "healthz":
             return {"ok": True, "version": PROTOCOL_VERSION}
@@ -116,6 +125,9 @@ class _Handler(BaseHTTPRequestHandler):
             raise ApiError(E_BAD_REQUEST, f"{method} not allowed here")
         body = self._read_body()
         body["exp_id"] = exp_id
+        if action == "report":
+            body["trial_id"] = trial_id
+            return b.report(ReportRequest.from_json(body)).to_json()
         if action == "suggestions":
             req = SuggestRequest.from_json(body)
             return b.suggest(req.exp_id, req.count).to_json()
@@ -279,6 +291,18 @@ class HTTPClient(SuggestionClient):
         return ObserveResponse.from_json(
             self._call("POST",
                        f"/v1/experiments/{req.exp_id}/observations",
+                       req.to_json()))
+
+    def report(self, req: ReportRequest) -> Decision:
+        # idempotent in the ways that matter: a retried report appends a
+        # duplicate metric line (harmless — rung recording dedupes by
+        # trial), so the keep-alive retry path stays enabled.  Reuses the
+        # persistent connection: the trial-events hot path pays no TCP
+        # handshake per report.
+        return Decision.from_json(
+            self._call("POST",
+                       f"/v1/experiments/{req.exp_id}/trials"
+                       f"/{req.trial_id or req.suggestion_id}/report",
                        req.to_json()))
 
     def release(self, exp_id: str, suggestion_id: str) -> bool:

@@ -14,33 +14,42 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from typing import Dict, Optional, Set, Union
 
 from repro.api.client import SuggestionClient
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
-                                CreateResponse, E_UNKNOWN_EXPERIMENT,
-                                ObserveRequest, ObserveResponse,
+                                CreateResponse, DECISION_STOP, Decision,
+                                E_UNKNOWN_EXPERIMENT, ObserveRequest,
+                                ObserveResponse, ReportRequest,
                                 StatusResponse, SuggestBatch, Suggestion)
 from repro.core.experiment import ExperimentConfig
 from repro.core.space import strip_internal
 from repro.core.store import Store
-from repro.core.suggest.base import Observation, Optimizer, make_optimizer
+from repro.core.suggest.base import (Observation, Optimizer, StoppingPolicy,
+                                     make_optimizer, make_stopping_policy)
 
 
 class _ExperimentState:
     """Live service-side state for one experiment (pending set is
-    in-memory only; a service restart reclaims all pending budget)."""
+    in-memory only; a service restart reclaims all pending budget —
+    early-stopping rung state, by contrast, IS durable: snapshot in the
+    experiment record + replay of the per-trial metric logs)."""
 
-    def __init__(self, cfg: ExperimentConfig, optimizer: Optimizer):
+    def __init__(self, cfg: ExperimentConfig, optimizer: Optimizer,
+                 stopper: Optional[StoppingPolicy] = None):
         self.cfg = cfg
         self.optimizer = optimizer
+        self.stopper = stopper
         self.lock = threading.RLock()
         self.pending: Dict[str, Suggestion] = {}
         self.closed: Set[str] = set()
         self.observed = 0
         self.failures = 0
         self.stopped = False
+        self.metric_seq = 0          # high-water mark of the metric stream
         self._seq = 0
+        self._snap_version = -1      # stopper.version last persisted
 
     def next_suggestion_id(self) -> str:
         self._seq += 1
@@ -83,7 +92,9 @@ class LocalClient(SuggestionClient):
                 optimizer = make_optimizer(cfg.optimizer, cfg.space,
                                            seed=cfg.seed,
                                            **cfg.optimizer_options)
-                state = _ExperimentState(cfg, optimizer)
+                stopper = (make_stopping_policy(cfg.early_stop, goal=cfg.goal)
+                           if cfg.early_stop else None)
+                state = _ExperimentState(cfg, optimizer, stopper)
                 # grab the experiment lock BEFORE publishing so no
                 # concurrent suggest() sees observed=0 pre-replay
                 state.lock.acquire()
@@ -105,10 +116,54 @@ class LocalClient(SuggestionClient):
                 {"history": [o.to_json() for o in prior]})
             state.observed = len(prior)
             state.failures = sum(1 for o in prior if o.failed)
+            self._restore_rungs(exp_id, state, cfg)
         finally:
             state.lock.release()
         return CreateResponse(exp_id=exp_id, resumed=resumed,
                               observations=state.observed)
+
+    def _restore_rungs(self, exp_id: str, state: _ExperimentState,
+                       cfg: ExperimentConfig) -> None:
+        """Resume trial-events state exactly like the observation log:
+        load the rung snapshot from the experiment record, replay the
+        metric-log tail beyond its ``seq`` high-water mark (crash between
+        a metric append and the snapshot write), and advance ``metric_seq``
+        past everything on disk so post-restart reports never reuse seq
+        numbers — even for experiments with no stopping policy.
+        Idempotent — a live state's absorbed stream is never replayed
+        twice."""
+        if cfg.early_stop and state.stopper is None:
+            state.stopper = make_stopping_policy(cfg.early_stop,
+                                                 goal=cfg.goal)
+        if state.stopper is not None and state.metric_seq == 0:
+            snap = self.store.get_status(exp_id).get("rungs")
+            if snap:
+                state.stopper.restore(snap)
+                state.metric_seq = int(snap.get("seq", 0))
+                state._snap_version = state.stopper.version
+        records = self.store.load_metrics(exp_id)
+        tail = [r for r in records if r.get("seq", 0) > state.metric_seq]
+        if state.stopper is not None:
+            for r in tail:
+                state.stopper.report(
+                    r.get("trial_key") or r.get("trial_id", ""),
+                    int(r["step"]), float(r["value"]))
+        if records:
+            state.metric_seq = max(
+                state.metric_seq,
+                max(int(r.get("seq", 0)) for r in records))
+        if tail:
+            self._snapshot_rungs(exp_id, state)
+
+    def _snapshot_rungs(self, exp_id: str, state: _ExperimentState) -> None:
+        """Persist the rung table into the experiment record (status.json)
+        whenever it actually changed — reports between rungs don't touch
+        policy state and stay off this path."""
+        if state.stopper is None or state.stopper.version == state._snap_version:
+            return
+        snap = dict(state.stopper.state(), seq=state.metric_seq)
+        state._snap_version = state.stopper.version
+        self.store.update_status(exp_id, rungs=snap)
 
     def _state(self, exp_id: str) -> _ExperimentState:
         with self._lock:
@@ -167,6 +222,37 @@ class LocalClient(SuggestionClient):
             self.store.update_status(req.exp_id, **fields)
             return ObserveResponse(accepted=True, duplicate=False,
                                    observations=state.observed)
+
+    def report(self, req: ReportRequest) -> Decision:
+        """Trial-events hot path: append the progress point to the trial's
+        metric stream, run it through the experiment's (shared) stopping
+        policy, and answer continue/stop/pause.  Single-writer under the
+        experiment lock — N schedulers prune against ONE rung table."""
+        state = self._state(req.exp_id)
+        with state.lock:
+            if state.stopped:
+                # deleted/stopped experiments wind their trials down via
+                # the next report, even without a worker-side stop flag
+                return Decision(DECISION_STOP, next_rung=None,
+                                seq=state.metric_seq)
+            # suggestion_id keys the stream when present: it is unique
+            # service-wide, so speculative twins merge and two schedulers'
+            # identically-numbered trials never collide
+            key = req.suggestion_id or req.trial_id
+            state.metric_seq += 1
+            rec = {"seq": state.metric_seq, "trial_key": key,
+                   "trial_id": req.trial_id, "step": req.step,
+                   "value": req.value, "time": time.time()}
+            if req.metadata:
+                rec["metadata"] = req.metadata
+            self.store.append_metric(req.exp_id, key, rec)
+            if state.stopper is None:
+                return Decision(next_rung=None, seq=state.metric_seq)
+            decision = state.stopper.report(key, req.step, req.value)
+            self._snapshot_rungs(req.exp_id, state)
+            return Decision(decision,
+                            next_rung=state.stopper.next_rung(key),
+                            seq=state.metric_seq)
 
     def release(self, exp_id: str, suggestion_id: str) -> bool:
         state = self._state(exp_id)

@@ -10,6 +10,7 @@ Operations (see API.md for the HTTP mapping):
   create   CreateExperiment  -> CreateResponse
   suggest  SuggestRequest    -> SuggestBatch
   observe  ObserveRequest    -> ObserveResponse
+  report   ReportRequest     -> Decision
   release  ReleaseRequest    -> ReleaseResponse
   status   StatusRequest     -> StatusResponse
   stop     StopRequest       -> StatusResponse
@@ -192,6 +193,81 @@ class ObserveResponse:
     def from_json(cls, d) -> "ObserveResponse":
         return cls(d.get("accepted", False), d.get("duplicate", False),
                    d.get("observations", 0))
+
+
+# ----------------------------------------------------------- trial events
+DECISION_CONTINUE = "continue"
+DECISION_STOP = "stop"
+DECISION_PAUSE = "pause"
+
+
+@dataclass
+class ReportRequest:
+    """Intermediate trial progress: one (step, value) point of the metric
+    stream.  ``value`` is the *raw* metric — the service applies the
+    experiment goal when it evaluates early-stopping rungs.  The service
+    appends every report to the trial's ``metrics.jsonl`` and answers with
+    a :class:`Decision`."""
+    exp_id: str
+    trial_id: str
+    step: int
+    value: float
+    suggestion_id: str = ""                 # ties the stream to a pending
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "trial_id": self.trial_id,
+                "step": self.step, "value": self.value,
+                "suggestion_id": self.suggestion_id,
+                "metadata": self.metadata}
+
+    @classmethod
+    def from_json(cls, d) -> "ReportRequest":
+        if "step" not in d or "value" not in d:
+            raise ApiError(E_BAD_REQUEST,
+                           "report requires 'step' + 'value'")
+        if not d.get("trial_id") and not d.get("suggestion_id"):
+            raise ApiError(E_BAD_REQUEST,
+                           "report requires 'trial_id' or 'suggestion_id'")
+        try:
+            step, value = int(d["step"]), float(d["value"])
+        except (TypeError, ValueError):
+            raise ApiError(E_BAD_REQUEST,
+                           f"report step/value must be numeric, got "
+                           f"{d['step']!r}/{d['value']!r}")
+        return cls(d.get("exp_id", ""), d.get("trial_id", ""),
+                   step, value,
+                   d.get("suggestion_id", ""), d.get("metadata", {}))
+
+
+@dataclass
+class Decision:
+    """Service verdict on a progress report.
+
+    decision   continue | stop | pause.  ``stop`` is final (the trial is
+               outside the top 1/eta at a rung it crossed); ``pause``
+               releases the trial's resources but keeps its suggestion
+               pending so it can be resumed from checkpoint when the rung
+               population shifts in its favor (promotion).
+    next_rung  smallest step at which the service needs the *next* report
+               from this trial (None = no early stopping configured).
+               Workers use it to throttle reports without ever skipping a
+               rung boundary.
+    seq        service-assigned position in the experiment-wide metric
+               stream (monotone; the rung-snapshot high-water mark).
+    """
+    decision: str = DECISION_CONTINUE
+    next_rung: Optional[int] = None
+    seq: int = 0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"decision": self.decision, "next_rung": self.next_rung,
+                "seq": self.seq}
+
+    @classmethod
+    def from_json(cls, d) -> "Decision":
+        return cls(d.get("decision", DECISION_CONTINUE), d.get("next_rung"),
+                   d.get("seq", 0))
 
 
 @dataclass

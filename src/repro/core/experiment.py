@@ -51,7 +51,10 @@ class ExperimentConfig:
     executor: str = "host"                 # host | slice | vmap
     max_retries: int = 1
     straggler_factor: float = 0.0          # 0 disables speculation
-    early_stop: Optional[Dict[str, Any]] = None   # ASHA options
+    early_stop: Optional[Dict[str, Any]] = None   # StoppingPolicy options
+    report_every: int = 1                  # min step delta between service
+                                           # reports (rung crossings always
+                                           # go through — see Scheduler)
     entrypoint: Optional[str] = None       # "module:function" for CLI runs
     seed: int = 0
 
@@ -64,7 +67,9 @@ class ExperimentConfig:
             "resources": self.resources.to_json(), "executor": self.executor,
             "max_retries": self.max_retries,
             "straggler_factor": self.straggler_factor,
-            "early_stop": self.early_stop, "entrypoint": self.entrypoint,
+            "early_stop": self.early_stop,
+            "report_every": self.report_every,
+            "entrypoint": self.entrypoint,
             "seed": self.seed,
         }
 
@@ -82,6 +87,7 @@ class ExperimentConfig:
             max_retries=int(d.get("max_retries", 1)),
             straggler_factor=float(d.get("straggler_factor", 0.0)),
             early_stop=d.get("early_stop"),
+            report_every=int(d.get("report_every", 1)),
             entrypoint=d.get("entrypoint"), seed=int(d.get("seed", 0)))
 
 
@@ -98,3 +104,8 @@ class TrialSpec:
     attempt: int = 0
     speculative: bool = False
     suggestion_id: str = ""    # pending-suggestion handle at the service
+    pauses: int = 0            # times the service paused this trial
+    paused_obs: int = -1       # experiment-wide observation count at the
+                               # last pause (-1 = never paused); the
+                               # scheduler resumes a paused trial only
+                               # after this grows (new rung information)

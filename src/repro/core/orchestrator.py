@@ -7,7 +7,10 @@ The orchestrator never holds a raw ``Optimizer`` and never reaches into
 scheduler internals: all experiment state flows through a
 ``SuggestionClient`` (see API.md) — the in-process ``LocalClient`` by
 default, or an ``HTTPClient`` when ``run(..., service=URL)`` drives the
-experiment against a remote ``repro serve-api`` process.
+experiment against a remote ``repro serve-api`` process.  Trial lifecycle
+(intermediate metrics, early-stopping decisions, pause/resume) is likewise
+service-owned: ``ctx.report`` flows through ``SuggestionClient.report``,
+so N orchestrators on one experiment share one rung table.
 """
 from __future__ import annotations
 
@@ -144,6 +147,7 @@ class Orchestrator:
         sched = self._schedulers.get(exp_id)
         if sched:
             st["running_trials"] = sched.running_trials
+            st["paused_trials"] = sched.paused_trials
         return st
 
     def logs(self, exp_id: str, follow: bool = False) -> Iterator[str]:

@@ -7,7 +7,12 @@ Responsibilities (paper mapping):
   "manages resource and capacity limitations" -> our allocator does);
 * failed observations are first-class results, with bounded retries
   (§2.5: "code throwing exceptions ... report failure");
-* ASHA early stopping via ``ctx.report`` (§2.5 stopping experiments);
+* early stopping via ``ctx.report`` (§2.5 stopping experiments) — the
+  decision is made SERVICE-side (shared ASHA rung table behind
+  ``SuggestionClient.report``), so any number of schedulers driving one
+  experiment prune consistently; this scheduler only honors the decision:
+  ``stop`` prunes the trial, ``pause`` checkpoints its progress marker,
+  releases the lease, and requeues the spec for a later resume (promotion);
 * straggler mitigation: speculative duplicate of the slowest running trial
   when it exceeds ``straggler_factor x`` the median completed runtime and a
   slot is free — first finisher wins (beyond-paper, required at 1000-node
@@ -25,6 +30,7 @@ only trial logs and its local status mirror.
 """
 from __future__ import annotations
 
+import json
 import queue
 import threading
 import time
@@ -35,22 +41,33 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.api.client import SuggestionClient
-from repro.api.protocol import ApiError, ObserveRequest
+from repro.api.protocol import (ApiError, DECISION_CONTINUE, DECISION_PAUSE,
+                                DECISION_STOP, ObserveRequest, ReportRequest)
 from repro.core.cluster import Cluster, SliceLease
 from repro.core.experiment import ExperimentConfig, TrialSpec
 from repro.core.space import strip_internal
 from repro.core.store import Store
-from repro.core.suggest import ASHA
 
 
-class TrialStopped(Exception):
-    """Raised inside a trial when ASHA (or delete) says stop.  Carries the
-    last reported (step, value) so the pruned trial still yields a (partial)
-    observation — ASHA rung values are informative, not failures."""
+class TrialExit(Exception):
+    """Base for control-flow exits raised from ``ctx.report``; carries the
+    last reported (step, value) so harvest can record the partial curve."""
 
     def __init__(self, trial_id, step=None, value=None):
         super().__init__(trial_id)
         self.step, self.value = step, value
+
+
+class TrialStopped(TrialExit):
+    """Raised inside a trial when the service (or delete) says stop.
+    The pruned trial still yields a (partial) observation — rung values
+    are informative, not failures."""
+
+
+class TrialPaused(TrialExit):
+    """Raised inside a trial when the service answers ``pause``: the trial
+    winds down, its lease is released and its spec requeued; it resumes
+    later from its checkpoint (promotion-based early stopping)."""
 
 
 class TrialPreempted(Exception):
@@ -67,19 +84,31 @@ class TrialContext:
     _log: Callable[[str], None]
     _report: Callable[[int, float], str]
     _should_stop: Callable[[], bool]
+    resume_step: Optional[int] = None   # set when resuming a paused trial:
+                                        # the step it last reported (your
+                                        # checkpoint in checkpoint_dir is
+                                        # at or beyond this step)
 
     def log(self, msg: str) -> None:
         self._log(msg)
 
     def report(self, step: int, value: float) -> None:
-        """Progress report; raises to stop the trial (ASHA / delete /
-        speculative loser / preemption)."""
+        """Progress report — a thin client call to the suggestion
+        service's trial-events endpoint.  Raises to end this execution:
+        ``TrialStopped`` on a final prune (service decision / delete /
+        speculative loser), ``TrialPaused`` when the service parks the
+        trial pending promotion, ``TrialPreempted`` on lease revocation.
+        Save your checkpoint (to ``checkpoint_dir``) before or at each
+        report so pause/preemption can resume without losing work."""
         if self.lease is not None and self.lease.revoked:
             raise TrialPreempted(self.trial_id)
         if self._should_stop():
             raise TrialStopped(self.trial_id, step, value)
-        if self._report(step, value) == "stop":
+        decision = self._report(step, value)
+        if decision == DECISION_STOP:
             raise TrialStopped(self.trial_id, step, value)
+        if decision == DECISION_PAUSE:
+            raise TrialPaused(self.trial_id, step, value)
 
 
 @dataclass
@@ -90,6 +119,40 @@ class _Running:
     started: float
     stop_flag: threading.Event
     speculative_of: Optional[str] = None
+
+
+class _Reporter:
+    """Worker-side report batching: at most one service round trip per
+    ``cfg.report_every`` steps per trial (same-step repeats always
+    coalesce), so a tight training loop can't DoS the service — but a
+    rung boundary is never skipped: the service returns ``next_rung`` and
+    any report at/past it goes through regardless of the throttle."""
+
+    def __init__(self, sched: "Scheduler", spec: TrialSpec):
+        self._sched = sched
+        self._spec = spec
+        self._last_step: Optional[int] = None
+        self._next_rung: Optional[int] = None
+
+    def __call__(self, step: int, value: float) -> str:
+        every = max(1, self._sched.cfg.report_every)
+        if self._last_step is not None:
+            rung_due = (self._next_rung is not None
+                        and step >= self._next_rung)
+            if step - self._last_step < every and not rung_due:
+                return DECISION_CONTINUE        # coalesced locally
+        try:
+            d = self._sched.client.report(ReportRequest(
+                exp_id=self._sched.exp_id, trial_id=self._spec.trial_id,
+                step=step, value=value,
+                suggestion_id=self._spec.suggestion_id))
+        except ApiError:
+            # progress metadata is advisory: a service blip must not kill
+            # the trial — skip this report and keep training
+            return DECISION_CONTINUE
+        self._last_step = step
+        self._next_rung = d.next_rung
+        return d.decision
 
 
 class Scheduler:
@@ -103,8 +166,6 @@ class Scheduler:
         self.cluster = cluster
         self.store = store
         self.trial_fn = trial_fn
-        self.asha = ASHA(goal=cfg.goal, **cfg.early_stop) \
-            if cfg.early_stop else None
         self._stop = threading.Event()
         self._wake = threading.Event()          # set by future done-callbacks
         self._lock = threading.Lock()
@@ -123,6 +184,12 @@ class Scheduler:
     @property
     def running_trials(self) -> int:
         return len(self._running)
+
+    @property
+    def paused_trials(self) -> int:
+        """Trials parked by a service ``pause`` decision, awaiting
+        promotion (their suggestions stay pending at the service)."""
+        return sum(1 for s in self._requeue if s.paused_obs >= 0)
 
     @property
     def finished(self) -> bool:
@@ -217,10 +284,38 @@ class Scheduler:
         return status
 
     # ------------------------------------------------------------ internals
+    def _pause_marker(self, trial_id: str):
+        return (self.store.exp_dir(self.exp_id) / "ckpt" / trial_id
+                / "pause.json")
+
+    def _write_pause_marker(self, spec: TrialSpec, step, value) -> None:
+        """Snapshot the paused trial's progress next to its checkpoints so
+        the resumed attempt knows where to pick up (``ctx.resume_step``)."""
+        p = self._pause_marker(spec.trial_id)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps({"step": step, "value": value,
+                                 "pauses": spec.pauses + 1,
+                                 "time": time.time()}))
+
+    def _load_pause_marker(self, ckpt_dir) -> Optional[int]:
+        try:
+            return int(json.loads(
+                (ckpt_dir / "pause.json").read_text())["step"])
+        except (OSError, ValueError, KeyError):
+            return None
+
     def _next_specs(self, n: int) -> List[TrialSpec]:
-        specs = []
+        specs: List[TrialSpec] = []
+        deferred: List[TrialSpec] = []
         while self._requeue and len(specs) < n:
-            specs.append(self._requeue.pop(0))
+            spec = self._requeue.pop(0)
+            if spec.paused_obs >= 0 and self._observations <= spec.paused_obs:
+                # paused awaiting promotion: no new rung information has
+                # arrived since the pause, so resuming now would only be
+                # re-paused — prefer fresh work
+                deferred.append(spec)
+                continue
+            specs.append(spec)
         if len(specs) < n and time.time() >= self._suggest_retry_at:
             try:
                 batch = self.client.suggest(self.exp_id, n - len(specs))
@@ -236,6 +331,13 @@ class Scheduler:
                 specs.append(TrialSpec(f"t{self._trial_seq:04d}",
                                        s.assignment,
                                        suggestion_id=s.suggestion_id))
+        if not specs and deferred and not self._running:
+            # nothing else to run and no trial in flight that could bring
+            # new information: resume paused trials anyway rather than
+            # deadlock (their next pause with unchanged observations is
+            # finalized as a pruned observation — see _harvest)
+            specs, deferred = deferred[:n], deferred[n:]
+        self._requeue.extend(deferred)
         return specs
 
     def _in_flight(self) -> int:
@@ -264,19 +366,22 @@ class Scheduler:
                 self._requeue.insert(0, spec)
                 return False
         stop_flag = threading.Event()
-        run_id = spec.trial_id + (f"-spec{spec.attempt}" if speculative_of
-                                  else (f"-r{spec.attempt}" if spec.attempt
-                                        else ""))
+        if speculative_of:
+            suffix = f"-spec{spec.attempt}"
+        else:
+            suffix = ((f"-r{spec.attempt}" if spec.attempt else "")
+                      + (f"-p{spec.pauses}" if spec.pauses else ""))
+        run_id = spec.trial_id + suffix
+        ckpt_dir = self.store.exp_dir(self.exp_id) / "ckpt" / spec.trial_id
         ctx = TrialContext(
             trial_id=run_id, experiment_id=self.exp_id, lease=lease,
-            checkpoint_dir=str(self.store.exp_dir(self.exp_id)
-                               / "ckpt" / spec.trial_id),
+            checkpoint_dir=str(ckpt_dir),
             _log=lambda m, rid=run_id: self.store.append_log(
                 self.exp_id, rid, m),
-            _report=(lambda step, v, tid=spec.trial_id:
-                     self.asha.report(tid, step, v) if self.asha
-                     else "continue"),
-            _should_stop=stop_flag.is_set)
+            _report=_Reporter(self, spec),
+            _should_stop=stop_flag.is_set,
+            resume_step=self._load_pause_marker(ckpt_dir)
+            if spec.pauses else None)
         fut = pool.submit(self._run_trial, spec, ctx)
         fut.add_done_callback(lambda _f: self._wake.set())
         self._running[run_id] = _Running(spec, fut, lease, time.time(),
@@ -326,6 +431,11 @@ class Scheduler:
                         f"straggler: speculative duplicate launched "
                         f"(elapsed {now - r.started:.1f}s > "
                         f"{self.cfg.straggler_factor:.1f} x median {med:.1f}s)")
+
+    def _goal_value(self, value: float) -> float:
+        """Observed values are goal-normalized (maximize) before they
+        reach the service."""
+        return value if self.cfg.goal == "max" else -value
 
     def _observe(self, spec: TrialSpec, origin: str,
                  value: Optional[float], failed: bool = False,
@@ -396,6 +506,9 @@ class Scheduler:
             except (TrialStopped,) as e:
                 value, err = e.value, ("stopped", str(e))
                 stopped_at = e.step
+            except TrialPaused as e:
+                value, err = e.value, ("paused", str(e))
+                stopped_at = e.step
             except TrialPreempted as e:
                 value, err = None, ("preempted", str(e))
             except Exception as e:  # noqa: trial crash is data, not a bug
@@ -416,16 +529,50 @@ class Scheduler:
                         rr.stop_flag.set()
                 runtime = time.time() - r.started
                 self._done_values.append(runtime)
-                goal_v = value if self.cfg.goal == "max" else -value
+                goal_v = self._goal_value(value)
                 self._observe(r.spec, origin, goal_v, metadata={
                     "trial_id": origin, "runtime_s": runtime,
                     "attempt": r.spec.attempt,
                     **{k: v for k, v in r.spec.assignment.items()
                        if k.startswith("__")}})
+            elif err[0] == "paused":
+                progressed = (r.spec.paused_obs < 0
+                              or self._observations > r.spec.paused_obs)
+                if r.speculative_of:
+                    pass    # origin still runs this suggestion; just drop
+                elif final or self._stop.is_set():
+                    self._release(r.spec)
+                elif progressed:
+                    # park the trial: keep its suggestion pending, snapshot
+                    # its progress marker, free the slot + lease; it
+                    # resumes from checkpoint once the rung population
+                    # shifts (or nothing else is left to run)
+                    self._write_pause_marker(r.spec, stopped_at, value)
+                    self._requeue.append(TrialSpec(
+                        r.spec.trial_id, r.spec.assignment,
+                        attempt=r.spec.attempt,
+                        suggestion_id=r.spec.suggestion_id,
+                        pauses=r.spec.pauses + 1,
+                        paused_obs=self._observations))
+                    self.store.append_log(
+                        self.exp_id, rid,
+                        f"paused at step={stopped_at} (lease released; "
+                        f"awaiting promotion)")
+                elif value is not None:
+                    # re-paused with no new observations since the last
+                    # pause: no promotion is coming — finalize as a pruned
+                    # partial observation so the experiment can complete
+                    goal_v = self._goal_value(value)
+                    self._observe(r.spec, origin, goal_v,
+                                  metadata={"trial_id": origin,
+                                            "pruned": True, "paused": True,
+                                            "pruned_at_step": stopped_at})
+                else:
+                    self._release(r.spec)
             elif err[0] == "stopped" and value is not None:
                 # early-stopped: record the last rung value as a pruned
                 # (partial) observation — informative, not a failure
-                goal_v = value if self.cfg.goal == "max" else -value
+                goal_v = self._goal_value(value)
                 self._observe(r.spec, origin, goal_v,
                               metadata={"trial_id": origin, "pruned": True,
                                         "pruned_at_step": stopped_at})

@@ -2,10 +2,11 @@
 metadata, parameters, and performance live here *in perpetuity* — destroying
 a cluster never touches the store (paper §2.6 dissociates the lifecycles).
 
-Layout (JSON/JSONL; append-only observation log is crash-safe):
+Layout (JSON/JSONL; append-only observation + metric logs are crash-safe):
   <root>/experiments/<id>/config.json
-  <root>/experiments/<id>/status.json
+  <root>/experiments/<id>/status.json          (incl. 'rungs' snapshot)
   <root>/experiments/<id>/observations.jsonl
+  <root>/experiments/<id>/metrics/<trial>.jsonl
   <root>/experiments/<id>/logs/<trial>.log
   <root>/clusters/<name>.json
 """
@@ -52,6 +53,7 @@ class Store:
     def create_experiment(self, exp_id: str, cfg: ExperimentConfig) -> None:
         d = self.exp_dir(exp_id)
         (d / "logs").mkdir(parents=True, exist_ok=True)
+        (d / "metrics").mkdir(parents=True, exist_ok=True)
         (d / "config.json").write_text(json.dumps(cfg.to_json(), indent=1))
         self.set_status(exp_id, {"state": "pending", "created": time.time()})
 
@@ -123,12 +125,49 @@ class Store:
                 out.append(Observation.from_json(json.loads(line)))
         return out
 
+    # ---------------------------------------------------------------- metrics
+    def metric_path(self, exp_id: str, trial_id: str) -> pathlib.Path:
+        return self.exp_dir(exp_id) / "metrics" / f"{trial_id}.jsonl"
+
+    def append_metric(self, exp_id: str, trial_id: str,
+                      record: Dict[str, Any]) -> None:
+        """Append one progress record to the trial's metric stream (the
+        service-side truth for early-stopping rung replay — same
+        append-only contract as the observation log)."""
+        p = self.metric_path(exp_id, trial_id)
+        if not p.parent.exists():
+            p.parent.mkdir(parents=True, exist_ok=True)
+        self._append_line(p, json.dumps(record))
+
+    def load_metrics(self, exp_id: str,
+                     trial_id: Optional[str] = None) -> List[Dict[str, Any]]:
+        """Metric records for one trial, or the whole experiment merged in
+        ``seq`` order (the service-assigned stream position), so a restart
+        replays rung history in the exact original interleaving."""
+        mdir = self.exp_dir(exp_id) / "metrics"
+        paths = ([self.metric_path(exp_id, trial_id)] if trial_id
+                 else sorted(mdir.glob("*.jsonl")) if mdir.exists() else [])
+        out: List[Dict[str, Any]] = []
+        for p in paths:
+            if not p.exists():
+                continue
+            for line in p.read_text().splitlines():
+                if line.strip():
+                    out.append(json.loads(line))
+        out.sort(key=lambda r: r.get("seq", 0))
+        return out
+
     # ----------------------------------------------------------------- logs
     def log_path(self, exp_id: str, trial_id: str) -> pathlib.Path:
         return self.exp_dir(exp_id) / "logs" / f"{trial_id}.log"
 
     def append_log(self, exp_id: str, trial_id: str, line: str) -> None:
-        p = self.log_path(exp_id, trial_id)
+        self._append_line(self.log_path(exp_id, trial_id),
+                          line.rstrip("\n"))
+
+    def _append_line(self, p: pathlib.Path, line: str) -> None:
+        """One write+flush through the bounded LRU of open append handles
+        (shared by trial logs and metric streams)."""
         with self._log_lock:
             f = self._log_handles.get(p)
             if f is None or f.closed:
@@ -142,7 +181,7 @@ class Store:
                         pass
             else:
                 self._log_handles.move_to_end(p)
-            f.write(line.rstrip("\n") + "\n")
+            f.write(line + "\n")
             f.flush()   # tail/iter_logs readers must see every line
 
     def close_logs(self) -> None:

@@ -5,7 +5,9 @@ out to — every strategy the paper cites (grid [3], random [2], evolutionary
 [14], swarm [4], Bayesian [6,11]) plus quasi-random Sobol and ASHA early
 stopping (paper §2.5 "stopping experiments").
 """
-from repro.core.suggest.base import Observation, Optimizer, make_optimizer
+from repro.core.suggest.base import (Observation, Optimizer, StoppingPolicy,
+                                     make_optimizer, make_stopping_policy)
 from repro.core.suggest.asha import ASHA
 
-__all__ = ["Observation", "Optimizer", "make_optimizer", "ASHA"]
+__all__ = ["Observation", "Optimizer", "make_optimizer", "ASHA",
+           "StoppingPolicy", "make_stopping_policy"]

@@ -85,12 +85,56 @@ class Optimizer(abc.ABC):
             self.tell(new)
 
 
+class StoppingPolicy(abc.ABC):
+    """Server-side early-stopping policy over trial metric streams.
+
+    Owned by the suggestion service (not the scheduler): all workers of an
+    experiment report into ONE policy instance, so pruning decisions are
+    consistent across schedulers and survive restarts via ``state()`` /
+    ``restore()`` (JSON-serializable rung snapshot) plus replay of the
+    append-only metric log.
+
+    ``report`` answers one of the protocol decisions: ``"continue"``,
+    ``"stop"`` (final), or ``"pause"`` (release resources, keep the
+    suggestion pending, resume from checkpoint on promotion).  ``version``
+    must increase on every state mutation — the service uses it to decide
+    when to re-persist the rung snapshot.
+    """
+
+    version: int = 0
+
+    @abc.abstractmethod
+    def report(self, trial_id: str, step: int, value: float) -> str:
+        """Evaluate one progress report -> 'continue' | 'stop' | 'pause'."""
+
+    def next_rung(self, trial_id: str) -> Optional[int]:
+        """Smallest step at which this trial's next report matters (None =
+        every report is equally (un)interesting)."""
+        return None
+
+    @abc.abstractmethod
+    def state(self) -> Dict[str, Any]:
+        """JSON-serializable snapshot (round-trips through ``restore``)."""
+
+    @abc.abstractmethod
+    def restore(self, state: Dict[str, Any]) -> None:
+        """Wholesale-replace internal state from a ``state()`` snapshot."""
+
+
 _REGISTRY: Dict[str, Any] = {}
+_STOPPING_REGISTRY: Dict[str, Any] = {}
 
 
 def register(name: str):
     def deco(cls):
         _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def register_stopping(name: str):
+    def deco(cls):
+        _STOPPING_REGISTRY[name] = cls
         return cls
     return deco
 
@@ -103,3 +147,17 @@ def make_optimizer(name: str, space: Space, seed: int = 0,
     if name not in _REGISTRY:
         raise KeyError(f"unknown optimizer {name!r}; have {list(_REGISTRY)}")
     return _REGISTRY[name](space, seed=seed, **options)
+
+
+def make_stopping_policy(options: Dict[str, Any],
+                         goal: str = "max") -> StoppingPolicy:
+    """Build the experiment's early-stopping policy from its config dict
+    (``ExperimentConfig.early_stop``).  ``policy`` selects the registered
+    implementation (default ``asha``); the rest are constructor options."""
+    from repro.core.suggest import asha  # noqa: side-effect registration
+    opts = dict(options or {})
+    name = opts.pop("policy", "asha")
+    if name not in _STOPPING_REGISTRY:
+        raise KeyError(f"unknown stopping policy {name!r}; "
+                       f"have {list(_STOPPING_REGISTRY)}")
+    return _STOPPING_REGISTRY[name](goal=goal, **opts)

@@ -1,0 +1,153 @@
+"""Fault-injection coverage: every ``wrap_trial`` branch under the
+scheduler's retry policy, and crash-vs-pending-suggestion hygiene (an
+injected crash mid-report must not orphan a pending suggestion — the
+service either counts it as a failed observation or reclaims the budget
+via release/forget)."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentConfig, Orchestrator, Param, Space)
+from repro.core.faults import FaultPolicy, InjectedCrash, wrap_trial
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg(**kw):
+    kw.setdefault("optimizer", "random")
+    kw.setdefault("space", _space())
+    return ExperimentConfig(**kw)
+
+
+def _orch():
+    orch = Orchestrator(tempfile.mkdtemp())
+    return orch, orch.client   # default client is a LocalClient sharing
+                               # the orchestrator's Store instance
+
+
+# --------------------------------------------------------- wrap_trial paths
+def test_wrap_trial_crash_branch_respects_retry_policy():
+    orch, _ = _orch()
+    attempts = {}
+
+    def trial(a, ctx):
+        attempts[round(a["x"], 6)] = attempts.get(round(a["x"], 6), 0) + 1
+        return a["x"]
+
+    wrapped = wrap_trial(trial, FaultPolicy(p_crash=1.0, seed=1))
+    exp = orch.run(_cfg(name="crash", budget=3, parallel=2, max_retries=2),
+                   trial_fn=wrapped)
+    obs = orch.store.load_observations(exp)
+    assert len(obs) == 3 and all(o.failed for o in obs)
+    # p_crash=1.0 crashes BEFORE the user fn: the inner trial never runs,
+    # but each spec was retried to the cap (attempt goes 0,1,2)
+    assert attempts == {}
+    assert orch.status(exp)["failures"] == 3
+
+
+def test_wrap_trial_nan_branch_is_not_a_failure():
+    orch, _ = _orch()
+    wrapped = wrap_trial(lambda a, ctx: a["x"],
+                         FaultPolicy(p_nan=1.0, seed=2))
+    exp = orch.run(_cfg(name="nan", budget=4, parallel=2, max_retries=0),
+                   trial_fn=wrapped)
+    obs = orch.store.load_observations(exp)
+    assert len(obs) == 4
+    # a diverged model returns NaN: recorded as data, not as a crash
+    assert all(not o.failed and np.isnan(o.value) for o in obs)
+
+
+def test_wrap_trial_straggler_branch_slows_but_completes():
+    orch, _ = _orch()
+    seen = []
+
+    def trial(a, ctx):
+        seen.append(a["x"])
+        return a["x"]
+
+    wrapped = wrap_trial(trial, FaultPolicy(p_slow=1.0, slow_factor=1.5,
+                                            seed=3))
+    exp = orch.run(_cfg(name="slow", budget=3, parallel=3, max_retries=0),
+                   trial_fn=wrapped)
+    obs = orch.store.load_observations(exp)
+    assert len(obs) == 3 and len(seen) == 3
+    assert all(not o.failed for o in obs)
+    logs = list(orch.store.iter_logs(exp))
+    assert any("fault-injection: straggler" in ln for ln in logs)
+
+
+def test_wrap_trial_mixed_policy_under_retries():
+    orch, _ = _orch()
+    wrapped = wrap_trial(lambda a, ctx: a["x"],
+                         FaultPolicy(p_crash=0.4, p_nan=0.2, seed=5))
+    exp = orch.run(_cfg(name="mix", budget=16, parallel=4, max_retries=1),
+                   trial_fn=wrapped)
+    obs = orch.store.load_observations(exp)
+    assert len(obs) == 16
+    crashed = [o for o in obs if o.failed]
+    # (wrap_trial rolls are keyed on the per-process string hash, so the
+    # crash/nan split varies by run — only the dominant class is asserted)
+    assert crashed, "some crashes expected at p_crash=0.4 over 16 trials"
+    # deterministic injection within a process: a crashed assignment
+    # crashes on retry too — failures burn max_retries+1 attempts and the
+    # budget still completes exactly
+    assert orch.status(exp)["observations"] == 16
+
+
+# -------------------------------------------- pending hygiene across crashes
+def test_crash_mid_report_leaves_no_orphaned_pending():
+    """A trial that crashes AFTER streaming progress reports must not leak
+    its pending suggestion: the failed observe closes it, and the GP's
+    constant-liar lie for the point is retired (Optimizer.forget /
+    tell-with-__lie-key)."""
+    orch, client = _orch()
+
+    def trial(a, ctx):
+        ctx.report(1, a["x"])
+        raise InjectedCrash("mid-report crash")
+
+    cfg = _cfg(name="midreport", budget=5, parallel=2, max_retries=0,
+               optimizer="gp",
+               optimizer_options={"n_init": 2, "fit_steps": 20},
+               early_stop={"min_steps": 1, "eta": 2})
+    exp = orch.run(cfg, trial_fn=trial)
+    state = client._exps[exp]
+    assert state.pending == {}, "crashed trials must not hold pending"
+    assert not getattr(state.optimizer, "_pending", {}), \
+        "constant-liar lies must be retired when the point resolves"
+    obs = orch.store.load_observations(exp)
+    # every budget slot resolved: either the crash (failed) or a
+    # service-side prune that beat the crash to the report (partial value)
+    assert len(obs) == 5
+    assert all(o.failed or o.metadata.get("pruned") for o in obs)
+    assert any(o.failed for o in obs), "some crashes expected"
+    # the metric stream up to the crash IS persisted (partial curves
+    # survive for post-mortems / future multi-fidelity optimizers)
+    assert client.store.load_metrics(exp), "pre-crash reports persisted"
+
+
+def test_delete_mid_run_releases_and_forgets_pending():
+    """The other reclaim path: a crash storm followed by delete — every
+    locally-requeued spec is released and its lie forgotten."""
+    import threading
+    orch, client = _orch()
+    started = threading.Event()
+
+    def trial(a, ctx):
+        started.set()
+        ctx.report(1, a["x"])
+        raise InjectedCrash("boom")
+
+    cfg = _cfg(name="reclaim", budget=30, parallel=2, max_retries=5,
+               optimizer="gp",
+               optimizer_options={"n_init": 2, "fit_steps": 20})
+    exp = orch.run(cfg, trial_fn=trial, background=True)
+    assert started.wait(10.0)
+    orch.delete(exp)
+    orch.wait(exp, timeout=20)
+    state = client._exps[exp]
+    assert state.pending == {}
+    assert not getattr(state.optimizer, "_pending", {})

@@ -1,0 +1,412 @@
+"""Trial-events subsystem (service-side early stopping): decision parity
+across backends, multi-rung crossing semantics, worker-side report
+throttling, checkpoint-aware pause/resume with lease accounting, rung-state
+durability across service restarts, and the paper's multi-scheduler
+scenario (one shared rung table for N workers)."""
+import json
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CreateExperiment, Decision, HTTPClient, LocalClient,
+                       ReportRequest, serve_api)
+from repro.core import (ExperimentConfig, Orchestrator, Param, Resources,
+                        Space)
+from repro.core.suggest import ASHA
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg(name="events", budget=6, parallel=2, **kw):
+    kw.setdefault("optimizer", "random")
+    kw.setdefault("early_stop", {"min_steps": 1, "eta": 2})
+    return ExperimentConfig(name=name, budget=budget, parallel=parallel,
+                            space=_space(), **kw)
+
+
+def _create(client, cfg, exp_id=None):
+    return client.create_experiment(
+        CreateExperiment(config=cfg.to_json(), exp_id=exp_id))
+
+
+# ------------------------------------------------------------ ASHA semantics
+def test_asha_multi_rung_jump_evaluated_at_every_crossed_rung():
+    """A report that jumps past several rungs must be judged at EVERY
+    crossed rung: failing a low rung can't be masked by a pass higher up."""
+    asha = ASHA(min_steps=1, eta=2, max_rungs=4)   # rungs 1, 2, 4, 8
+    # good trials populate rungs 1..4 (ascending, so each is top on entry)
+    for t, v in (("a", 0.8), ("b", 0.9), ("c", 1.0)):
+        assert asha.report(t, 4, v) == "continue"
+    # bad trial jumps straight to step 4: outside top-1/2 at rung 1
+    # already — must stop even though it "reached" rung 4
+    assert asha.report("bad", 4, 0.1) == "stop"
+    # ...and the decision is final: a later (reordered/duplicate) report
+    # at a higher step cannot resurrect it
+    assert asha.report("bad", 8, 2.0) == "stop"
+    # recorded at the failing rung, but NOT above it: an unpromoted trial
+    # must not pad higher-rung populations (that would loosen their
+    # top-1/eta cut for everyone else)
+    st = asha.state()
+    assert 0.1 in st["values"]["1"]
+    assert 0.1 not in st["values"]["2"] and 0.1 not in st["values"]["4"]
+
+
+def test_asha_stop_mode_judges_each_rung_once():
+    """A between-rung report (noisy metric dip) must not retro-fail a
+    rung the trial already passed — stop mode evaluates a rung exactly
+    once, when first crossed."""
+    asha = ASHA(min_steps=1, eta=3, max_rungs=3)   # rungs 1, 3, 9
+    for i in range(8):
+        asha.report(f"t{i}", 1, 0.1 * (i + 1))
+    # the best trial passed rung 1 (0.8, cutoff covers top 1/3)
+    assert asha.report("t7", 1, 0.8) == "continue"
+    # transient dip at step 2 (no new rung crossed): must NOT stop it
+    assert asha.report("t7", 2, 0.05) == "continue"
+    # ...whereas in pause mode the re-check IS the promotion mechanism
+    pauser = ASHA(min_steps=1, eta=2, max_rungs=2, mode="pause")
+    pauser.report("a", 1, 0.9)
+    assert pauser.report("b", 1, 0.1) == "pause"
+    for t, v in (("c", 0.01), ("d", 0.02)):
+        pauser.report(t, 1, v)
+    assert pauser.report("b", 1, 0.1) == "continue"   # promoted
+
+
+def test_asha_state_roundtrips_through_json():
+    asha = ASHA(min_steps=1, eta=3, max_rungs=3)
+    for t, s, v in (("a", 1, 0.5), ("b", 3, 0.8), ("a", 3, 0.4),
+                    ("c", 1, 0.1)):
+        asha.report(t, s, v)
+    wire = json.loads(json.dumps(asha.state()))
+    clone = ASHA(min_steps=1, eta=3, max_rungs=3)
+    clone.restore(wire)
+    assert clone.state() == asha.state()
+    # the clone keeps deciding identically
+    assert clone.report("d", 1, 0.05) == asha.report("d", 1, 0.05)
+
+
+# -------------------------------------------------- backend decision parity
+def _stream():
+    """A report stream with early leaders, stragglers, and rung jumps."""
+    rng = np.random.default_rng(7)
+    stream = []
+    for i in range(8):
+        tid = f"t{i:02d}"
+        v = float(rng.uniform())
+        for step in (1, 2, 4, 8):
+            stream.append((tid, step, v * step / 8.0))
+    rng.shuffle(stream)
+    return stream
+
+
+def test_http_and_local_backends_return_identical_decisions():
+    cfg = _cfg(budget=50)
+    local = LocalClient(tempfile.mkdtemp())
+    exp_l = _create(local, cfg).exp_id
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        http = HTTPClient(server.url)
+        exp_h = _create(http, cfg).exp_id
+        decisions_l, decisions_h = [], []
+        for tid, step, v in _stream():
+            dl = local.report(ReportRequest(exp_l, tid, step, v))
+            dh = http.report(ReportRequest(exp_h, tid, step, v))
+            decisions_l.append(dl)
+            decisions_h.append(dh)
+        assert decisions_l == decisions_h
+        assert any(d.decision == "stop" for d in decisions_l), \
+            "the stream is adversarial enough that someone must stop"
+        # identical rung tables too
+        sl = local._exps[exp_l].stopper.state()
+        sh = server.backend._exps[exp_h].stopper.state()
+        assert sl == sh
+    finally:
+        server.shutdown()
+
+
+def test_report_with_non_numeric_fields_is_bad_request():
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        http = HTTPClient(server.url)
+        exp = _create(http, _cfg()).exp_id
+        from repro.api import ApiError
+        with pytest.raises(ApiError) as ei:
+            http._call("POST", f"/v1/experiments/{exp}/trials/t1/report",
+                       {"step": "abc", "value": 0.5})
+        assert ei.value.code == "bad_request"
+        with pytest.raises(ApiError) as ei:
+            http._call("POST", f"/v1/experiments/{exp}/trials/t1/report",
+                       {"value": 0.5})
+        assert ei.value.code == "bad_request"
+    finally:
+        server.shutdown()
+
+
+def test_report_without_early_stop_still_persists_metrics():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(early_stop=None)).exp_id
+    for step in (1, 2, 3):
+        d = client.report(ReportRequest(exp, "t01", step, 0.5))
+        assert d.decision == "continue" and d.next_rung is None
+    recs = client.store.load_metrics(exp, "t01")
+    assert [r["step"] for r in recs] == [1, 2, 3]
+    assert [r["seq"] for r in recs] == [1, 2, 3]
+
+
+# ------------------------------------------------------- worker-side batching
+def test_report_every_throttles_but_never_skips_a_rung():
+    """With report_every=5 a tight loop coalesces service calls, yet every
+    rung boundary still reaches the service (Decision.next_rung)."""
+    orch = Orchestrator(tempfile.mkdtemp())
+    cfg = _cfg(name="throttle", budget=2, parallel=2, report_every=5,
+               early_stop={"min_steps": 4, "eta": 2, "max_rungs": 2})
+    client = orch.client
+
+    def trial(a, ctx):
+        for step in range(1, 20):       # 19 reports from the trial loop
+            ctx.report(step, float(step))   # tied values: nobody pruned
+        return a["x"]
+
+    exp = orch.run(cfg, trial_fn=trial)
+    by_trial = _metrics_by_trial(client, exp)
+    assert len(by_trial) == 2
+    for key, recs in by_trial.items():
+        steps = [r["step"] for r in recs]
+        # rungs are 4 and 8: both boundaries must have gone through
+        assert any(s >= 4 for s in steps) and any(s >= 8 for s in steps)
+        # throttle: far fewer service calls than the 19 loop reports
+        assert len(steps) <= 6, steps
+
+
+def _metrics_by_trial(client, exp):
+    out = {}
+    for rec in client.store.load_metrics(exp):
+        out.setdefault(rec["trial_key"], []).append(rec)
+    return out
+
+
+def test_same_step_reports_coalesce_to_one_service_call():
+    orch = Orchestrator(tempfile.mkdtemp())
+    cfg = _cfg(name="coalesce", budget=1, parallel=1, early_stop=None)
+
+    def trial(a, ctx):
+        for _ in range(50):
+            ctx.report(1, a["x"])       # a tight loop re-reporting step 1
+        return a["x"]
+
+    exp = orch.run(cfg, trial_fn=trial)
+    recs = orch.client.store.load_metrics(exp)
+    assert len(recs) == 1, "same-step repeats must not DoS the service"
+
+
+# ------------------------------------------------- pause / resume lifecycle
+def test_pause_releases_lease_and_resumes_from_checkpoint():
+    """mode='pause': a below-threshold trial is parked (lease returned to
+    the pool, suggestion kept pending) and later resumed from its
+    checkpoint at the step it paused at."""
+    orch = Orchestrator(tempfile.mkdtemp())
+    orch.cluster_create({"cluster_name": "pp",
+                         "pools": [{"name": "tpu", "resource": "tpu",
+                                    "chips": 2}]})
+    client = orch.client
+    cfg = _cfg(name="pause", budget=2, parallel=1,
+               resources=Resources(pool="tpu", chips=2),
+               early_stop={"min_steps": 1, "eta": 2, "mode": "pause"})
+    exp = _create(client, cfg).exp_id
+    # pre-seed the rung table with a strong trial so every scheduler trial
+    # is outside the top-1/2 at every rung -> deterministic pauses
+    for step in (1, 2, 4):
+        client.report(ReportRequest(exp, "warm", step, 9.0))
+
+    runs = []           # (run_id, resume_step) per execution
+
+    def trial(a, ctx):
+        runs.append((ctx.trial_id, ctx.resume_step))
+        start = ctx.resume_step or 0
+        for step in (1, 2, 4):
+            if step <= start:
+                continue                # resumed: skip already-done work
+            ctx.report(step, a["x"])
+        return a["x"]
+
+    orch.run(cfg, trial_fn=trial, exp_id=exp)
+
+    # every execution paused at least once and resumed from its marker
+    resumed = [(rid, rs) for rid, rs in runs if rs]
+    assert resumed, f"expected paused->resumed executions, got {runs}"
+    assert all(rs in (1, 2, 4) for _, rs in resumed)
+    # paused re-runs carry the -pN suffix and a growing resume step
+    assert any("-p" in rid for rid, _ in resumed)
+    # all leases returned to the pool
+    assert orch.cluster_status("pp")["pools"]["tpu"]["free"] == 2
+    # the experiment still completed its budget: re-pauses with no new
+    # information were finalized as pruned partial observations
+    obs = orch.store.load_observations(exp)
+    assert len(obs) == 2
+    assert all(o.metadata.get("pruned") and o.metadata.get("paused")
+               for o in obs)
+    st = client.status(exp)
+    assert st.pending == 0, "no pending suggestion may leak"
+
+
+def test_pause_decision_parity_between_backends():
+    cfg = _cfg(budget=10,
+               early_stop={"min_steps": 1, "eta": 2, "mode": "pause"})
+    local = LocalClient(tempfile.mkdtemp())
+    exp_l = _create(local, cfg).exp_id
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        http = HTTPClient(server.url)
+        exp_h = _create(http, cfg).exp_id
+        for tid, step, v in (("a", 1, 0.9), ("b", 1, 0.1), ("b", 2, 0.2)):
+            dl = local.report(ReportRequest(exp_l, tid, step, v))
+            dh = http.report(ReportRequest(exp_h, tid, step, v))
+            assert dl == dh
+        assert dl.decision == "pause"   # 'b' is parked, not killed
+        # promotion: once the rung population turns over, 'b' continues
+        for tid, v in (("c", 0.05), ("d", 0.06), ("e", 0.07)):
+            local.report(ReportRequest(exp_l, tid, 1, v))
+        assert local.report(
+            ReportRequest(exp_l, "b", 2, 0.2)).decision == "continue"
+    finally:
+        server.shutdown()
+
+
+# ----------------------------------------------- durability across restarts
+def test_rung_state_survives_service_restart():
+    """Kill the service (drop the LocalClient), resume on the same store:
+    the rung table must be byte-identical — snapshot fast path."""
+    root = tempfile.mkdtemp()
+    cfg = _cfg(budget=50)
+    c1 = LocalClient(root)
+    exp = _create(c1, cfg).exp_id
+    for tid, step, v in _stream():
+        c1.report(ReportRequest(exp, tid, step, v))
+    pre = c1._exps[exp].stopper.state()
+    pre_seq = c1._exps[exp].metric_seq
+
+    c2 = LocalClient(root)                      # "restarted" service
+    resp = _create(c2, cfg, exp_id=exp)
+    assert resp.resumed
+    assert c2._exps[exp].stopper.state() == pre
+    assert c2._exps[exp].metric_seq == pre_seq
+    # decisions continue identically post-restart
+    assert (c1.report(ReportRequest(exp, "fresh", 1, 0.0)).decision
+            == c2.report(ReportRequest(exp, "fresh", 1, 0.0)).decision)
+
+
+def test_rung_state_rebuilt_from_metric_log_when_snapshot_lost():
+    """Same restart, but the snapshot is gone (crash before the status
+    write): the per-trial metric logs replay in seq order to the exact
+    same rung table."""
+    root = tempfile.mkdtemp()
+    cfg = _cfg(budget=50)
+    c1 = LocalClient(root)
+    exp = _create(c1, cfg).exp_id
+    for tid, step, v in _stream():
+        c1.report(ReportRequest(exp, tid, step, v))
+    pre = c1._exps[exp].stopper.state()
+
+    # simulate losing the snapshot
+    st_path = c1.store.exp_dir(exp) / "status.json"
+    st = json.loads(st_path.read_text())
+    assert st.pop("rungs", None) is not None
+    st_path.write_text(json.dumps(st))
+
+    c2 = LocalClient(root)
+    _create(c2, cfg, exp_id=exp)
+    assert c2._exps[exp].stopper.state() == pre
+
+
+def test_metric_seq_stays_monotone_across_restart_without_early_stop():
+    """Even with no stopping policy, a restarted service must pick up the
+    metric-stream high-water mark — seq numbers are never reused."""
+    root = tempfile.mkdtemp()
+    cfg = _cfg(early_stop=None)
+    c1 = LocalClient(root)
+    exp = _create(c1, cfg).exp_id
+    for step in (1, 2, 3):
+        c1.report(ReportRequest(exp, "t01", step, 0.5))
+
+    c2 = LocalClient(root)                      # "restarted" service
+    _create(c2, cfg, exp_id=exp)
+    d = c2.report(ReportRequest(exp, "t01", 4, 0.5))
+    assert d.seq == 4
+    seqs = [r["seq"] for r in c2.store.load_metrics(exp)]
+    assert seqs == [1, 2, 3, 4]
+
+
+# ------------------------------------- the paper's multi-scheduler scenario
+def test_two_schedulers_share_one_rung_table_and_resume():
+    """Two full Schedulers drive ONE experiment over HTTP: pruning
+    decisions come from one shared rung table (a trial below threshold is
+    stopped no matter which worker runs it), and the rung state survives
+    a service restart + --resume."""
+    service_root = tempfile.mkdtemp()
+    server = serve_api(service_root).start()
+    try:
+        client = HTTPClient(server.url)
+        cfg = _cfg(name="shared-asha", budget=16, parallel=2,
+                   early_stop={"min_steps": 1, "eta": 2})
+        exp = _create(client, cfg).exp_id
+
+        def trial(a, ctx):
+            for step in (1, 2, 4):
+                time.sleep(0.002)
+                ctx.report(step, a["x"] * step)
+            return a["x"]
+
+        def run_worker():
+            orch = Orchestrator(tempfile.mkdtemp())
+            orch.run(_cfg(name="shared-asha", budget=16, parallel=2,
+                          early_stop={"min_steps": 1, "eta": 2}),
+                     trial_fn=trial, exp_id=exp, service=server.url)
+
+        workers = [threading.Thread(target=run_worker) for _ in range(2)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join(120)
+        st = client.status(exp)
+        assert st.observations == 16 and st.pending == 0
+
+        backend = server.backend
+        obs = backend.store.load_observations(exp)
+        pruned = [o for o in obs if o.metadata.get("pruned")]
+        full = [o for o in obs if not o.metadata.get("pruned")
+                and not o.failed]
+        assert pruned, "shared ASHA should prune someone"
+        assert np.mean([o.value for o in full]) > \
+            np.mean([o.value for o in pruned])
+        # consistency: pruning is service-side, so the stopped set and the
+        # pruned observations line up one-to-one — a trial stopped on one
+        # worker's rung data is stopped, period (suggestion ids key the
+        # rung table, so the two workers' identically-numbered local
+        # trials never collide)
+        stopper = backend._exps[exp].stopper
+        pre = stopper.state()
+        assert len(pre["stopped"]) == len(pruned)
+        metric_keys = {r["trial_key"]
+                       for r in backend.store.load_metrics(exp)}
+        assert set(pre["stopped"]) <= metric_keys
+
+        # restart the service over the same store, resume the experiment
+        server.shutdown()
+        server2 = serve_api(service_root).start()
+        try:
+            client2 = HTTPClient(server2.url)
+            resp = _create(client2, cfg, exp_id=exp)
+            assert resp.resumed and resp.observations == 16
+            assert server2.backend._exps[exp].stopper.state() == pre
+        finally:
+            server2.shutdown()
+            server2 = None
+    finally:
+        try:
+            server.shutdown()
+        except Exception:
+            pass
