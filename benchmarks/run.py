@@ -44,6 +44,9 @@ def collect(quick: bool = False) -> dict:
     for backend, us in bench_suggest_latency.run_report(
             n=50 if quick else 200):
         rows[f"bench_service/{backend}"] = round(us, 1)
+    for name, us in bench_suggest_latency.run_contended(
+            calls=4 if quick else 8, seed_obs=24 if quick else 40):
+        rows[f"bench_service/{name}"] = round(us, 1)
     for p, us, tps in bench_scheduler.throughput_rows(
             parallels=(8,) if quick else (1, 8, 32),
             budget=20 if quick else 40):

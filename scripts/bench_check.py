@@ -4,8 +4,10 @@
 Runs the quick hot-path benchmark sweep, writes fresh rows, and compares
 them against the committed ``BENCH_suggest.json`` baseline: any gated row
 slower than ``tolerance``x its baseline fails the check (exit 1).  Gated
-rows are the suggestion/service hot path; scheduler throughput is reported
-but not gated (too machine-dependent).
+rows are the suggestion/service hot path — including the
+``bench_service/suggest_contended_*`` pipeline rows (p50 suggest latency
+under 1/8/32-way client contention, ISSUE 4); scheduler throughput is
+reported but not gated (too machine-dependent).
 
 Usage:
   PYTHONPATH=src python scripts/bench_check.py             # gate vs baseline
@@ -19,6 +21,14 @@ import time
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 GATED_PREFIXES = ("bench_suggest/gp", "bench_service/")
+# Reported but never gated: the c32 contention rows run the service at
+# ~4x the GP's intrinsic suggestion throughput, so they are bimodal by
+# design (all-hit us vs miss-queueing ~100ms depending on how the fleet
+# staggers); the sync row is the deliberately-slow pre-pipeline
+# reference, not a served path.
+UNGATED_ROWS = ("bench_service/suggest_contended_local/c32",
+                "bench_service/suggest_contended_http/c32",
+                "bench_service/suggest_contended_sync/c8")
 
 
 def main(argv=None) -> int:
@@ -73,7 +83,8 @@ def main(argv=None) -> int:
     failures = []
     for name, us in sorted(fresh.items()):
         ref = baseline.get(name)
-        gated = any(name.startswith(p) for p in GATED_PREFIXES)
+        gated = (any(name.startswith(p) for p in GATED_PREFIXES)
+                 and name not in UNGATED_ROWS)
         note = ""
         if ref:
             ratio = us / ref
@@ -81,6 +92,11 @@ def main(argv=None) -> int:
             if gated and ratio > args.tolerance:
                 note += "  REGRESSION"
                 failures.append(name)
+        else:
+            # not yet in the committed baseline (e.g. a freshly added
+            # contention row): reported, never gated — run --update to
+            # start tracking it
+            note = "  (new; no baseline)"
         print(f"{name:44s} {us:10.0f}us{note}")
     if failures:
         print(f"\nPERF GATE FAILED ({len(failures)} rows > "

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI entrypoint: tier-1 correctness, then the tier-2 perf gate.
+# CI entrypoint: tier-1 correctness, then the tier-2 gate (multi-client
+# contention tests + perf check).
 #
-#   scripts/ci.sh            # pytest -x -q && bench_check (non-zero on fail)
+#   scripts/ci.sh            # non-zero exit on any failure
 #
 # ROADMAP.md documents both tiers.  Run on an otherwise idle machine:
 # CPU contention alone inflates perf rows ~2x (the gate tolerates 3x).
@@ -12,5 +13,18 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== tier-2: multi-client contention tests =="
+REPRO_CONTENTION=1 python -m pytest -q -m contention tests/test_pipeline.py
+
 echo "== tier-2: perf gate =="
-python scripts/bench_check.py
+bench_out=$(mktemp)
+if ! python scripts/bench_check.py | tee "$bench_out"; then
+    echo
+    echo "== bench delta summary (worst rows vs baseline) =="
+    grep -E "x[0-9]+\.[0-9]+" "$bench_out" \
+        | sed -E 's/^(.*) x([0-9]+\.[0-9]+)(.*)$/\2 \1 x\2\3/' \
+        | sort -rn | head -10 | cut -d' ' -f2-
+    rm -f "$bench_out"
+    exit 1
+fi
+rm -f "$bench_out"

@@ -178,6 +178,9 @@ class ApiServer:
         self._httpd.server_close()
         if self._thread is not None:
             self._thread.join(timeout=5)
+        # drain the suggestion pipeline: prefetch pumps must not keep
+        # speculating (or hold optimizer locks) past the listener's death
+        self.backend.close()
 
 
 def serve_api(store: Union[Store, str, LocalClient],

@@ -7,6 +7,27 @@ tracked as a *pending suggestion*, so concurrent ``suggest`` calls from
 parallel workers never receive duplicate assignments and never
 oversubscribe the observation budget.
 
+Suggestion pipeline (ISSUE 4): suggestion latency is decoupled from model
+cost.  Per experiment, two locks split the work:
+
+* ``state.lock`` — cheap bookkeeping (pending set, counters, queue pops).
+  ``suggest`` normally completes under this lock alone: it pops a
+  pre-computed suggestion from the prefetch queue in ~µs.
+* ``state.opt_lock`` — serializes *all* optimizer compute (ask / tell /
+  forget / restore).  Held by the background :class:`SuggestionPump`
+  (which keeps the queue warm, folds deferred observations, refits
+  hyperparameters, and prewarms XLA shape buckets) and by the coalesced
+  miss path, where N concurrent queue misses are served by ONE batched
+  ``ask(n)`` instead of N serialized fits.
+
+``observe``/``release`` never touch the optimizer inline: they enqueue a
+deferred tell/forget op (``state.ops``) and wake the pump; with the pump
+disabled (``prefetch=0``) the op is drained synchronously, preserving the
+fully-synchronous pre-pipeline semantics.  Lock order is always
+``opt_lock`` before ``state.lock``; ``state.ops`` is popped only under
+``opt_lock`` (see ``pipeline.drain_ops``), which makes resume's
+"drain, then replay the log tail" sequence race-free.
+
 This same object is also the backend behind ``serve_api`` — the HTTP layer
 is a thin JSON shim over a ``LocalClient``.
 """
@@ -15,9 +36,12 @@ from __future__ import annotations
 import json
 import threading
 import time
-from typing import Dict, Optional, Set, Union
+from typing import Dict, List, Optional, Set, Union
 
 from repro.api.client import SuggestionClient
+from repro.api.pipeline import (MissSlot, PrefetchItem, SuggestionPump,
+                                drain_ops, pop_prefetched, retire_queue,
+                                serve_misses)
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 CreateResponse, DECISION_STOP, Decision,
                                 E_UNKNOWN_EXPERIMENT, ObserveRequest,
@@ -31,9 +55,10 @@ from repro.core.suggest.base import (Observation, Optimizer, StoppingPolicy,
 
 
 class _ExperimentState:
-    """Live service-side state for one experiment (pending set is
-    in-memory only; a service restart reclaims all pending budget —
-    early-stopping rung state, by contrast, IS durable: snapshot in the
+    """Live service-side state for one experiment (pending set, prefetch
+    queue, and deferred-op list are in-memory only; a service restart
+    reclaims all pending budget and speculative suggestions — early-
+    stopping rung state, by contrast, IS durable: snapshot in the
     experiment record + replay of the per-trial metric logs)."""
 
     def __init__(self, cfg: ExperimentConfig, optimizer: Optimizer,
@@ -41,19 +66,43 @@ class _ExperimentState:
         self.cfg = cfg
         self.optimizer = optimizer
         self.stopper = stopper
-        self.lock = threading.RLock()
+        self.lock = threading.RLock()        # bookkeeping (fast paths)
+        self.opt_lock = threading.RLock()    # optimizer compute (slow paths)
         self.pending: Dict[str, Suggestion] = {}
         self.closed: Set[str] = set()
         self.observed = 0
         self.failures = 0
         self.stopped = False
+        self.best: Optional[Observation] = None
         self.metric_seq = 0          # high-water mark of the metric stream
+        # --- pipeline state (see repro.api.pipeline) ---
+        self.queue: List[PrefetchItem] = []      # warm speculative asks
+        self.ops: List[tuple] = []               # deferred tell/forget
+        self.miss_slots: List[MissSlot] = []     # coalescing parked misses
+        self.pump: Optional[SuggestionPump] = None
+        self.staleness = max(1, cfg.staleness)
+        self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
+                      "invalidated": 0, "prefilled": 0, "prewarmed": 0}
+        self.last_mirror = 0.0       # status.json mirror throttle
+        self.appends = 0             # observes between log append + account
+        self.append_cv = threading.Condition(self.lock)
         self._seq = 0
         self._snap_version = -1      # stopper.version last persisted
 
     def next_suggestion_id(self) -> str:
         self._seq += 1
         return f"s{self._seq:05d}"
+
+    def pump_depth(self) -> int:
+        """Resolved prefetch depth: an explicit ``cfg.prefetch`` wins;
+        ``None`` auto-enables the pump only for optimizers whose ``ask``
+        is expensive (model-based — GP), sized to cover one full
+        slot-fill burst plus refill headroom."""
+        if self.cfg.prefetch is not None:
+            return max(0, int(self.cfg.prefetch))
+        if getattr(self.optimizer, "expensive_ask", False):
+            return max(2, min(2 * int(self.cfg.parallel), 16))
+        return 0
 
 
 def _public_best(best) -> Optional[Dict]:
@@ -83,7 +132,8 @@ class LocalClient(SuggestionClient):
                        and (self.store.exp_dir(exp_id) / "config.json")
                        .exists())
             state = self._exps.get(exp_id) if exp_id else None
-            if state is None:
+            fresh = state is None
+            if fresh:
                 if exp_id is None:
                     from repro.core.experiment import new_experiment_id
                     exp_id = new_experiment_id()
@@ -95,20 +145,38 @@ class LocalClient(SuggestionClient):
                 stopper = (make_stopping_policy(cfg.early_stop, goal=cfg.goal)
                            if cfg.early_stop else None)
                 state = _ExperimentState(cfg, optimizer, stopper)
-                # grab the experiment lock BEFORE publishing so no
-                # concurrent suggest() sees observed=0 pre-replay
+                # grab both locks BEFORE publishing (canonical order: opt
+                # before state) so no concurrent suggest sees observed=0
+                # pre-replay
+                state.opt_lock.acquire()
                 state.lock.acquire()
                 self._exps[exp_id] = state
-            else:
-                state.lock.acquire()
-            resumed = on_disk or state.observed > 0
+        if not fresh:
+            # live re-create/resume: quiesce the pump first, then take the
+            # locks in canonical order
+            with state.lock:
+                pump = state.pump
+            if pump is not None:
+                pump.stop(join=True)
+            state.opt_lock.acquire()
+            state.lock.acquire()
         try:
+            resumed = on_disk or state.observed > 0
             state.cfg = cfg          # resume may raise the budget
             state.stopped = False    # re-creating declares intent to run
+            state.staleness = max(1, cfg.staleness)
             if resumed:
                 # keep the stored config in sync with the resumed one
                 (self.store.exp_dir(exp_id) / "config.json").write_text(
                     json.dumps(cfg.to_json(), indent=1))
+            # quiesce in-flight observes (append done, accounting not yet)
+            # so the log, the deferred ops, and the counters agree, then
+            # fold the deferred observations BEFORE the replay — the
+            # log-tail arithmetic in Optimizer.restore stays exact
+            deadline = time.monotonic() + 5.0
+            while state.appends and time.monotonic() < deadline:
+                state.append_cv.wait(0.1)
+            drain_ops(state)
             prior = self.store.load_observations(exp_id)
             # restore() is idempotent: only the log tail beyond what the
             # optimizer has already absorbed is replayed
@@ -116,9 +184,13 @@ class LocalClient(SuggestionClient):
                 {"history": [o.to_json() for o in prior]})
             state.observed = len(prior)
             state.failures = sum(1 for o in prior if o.failed)
+            ok = [o for o in prior if not o.failed and o.value is not None]
+            state.best = max(ok, key=lambda o: o.value) if ok else None
             self._restore_rungs(exp_id, state, cfg)
         finally:
             state.lock.release()
+            state.opt_lock.release()
+        self._ensure_pump(exp_id, state)
         return CreateResponse(exp_id=exp_id, resumed=resumed,
                               observations=state.observed)
 
@@ -173,27 +245,91 @@ class LocalClient(SuggestionClient):
                            f"no live experiment {exp_id!r}")
         return state
 
+    # ------------------------------------------------------------- pipeline
+    def _mint(self, state: _ExperimentState, assignment) -> Suggestion:
+        """Turn an assignment into a tracked pending suggestion.  MUST be
+        called with ``state.lock`` held."""
+        s = Suggestion(state.next_suggestion_id(), assignment)
+        state.pending[s.suggestion_id] = s
+        return s
+
+    def _ensure_pump(self, exp_id: str, state: _ExperimentState) -> None:
+        """Start (or restart, e.g. after ``close``/resume) the prefetch
+        pump when the config calls for one and the experiment can still
+        make progress."""
+        depth = state.pump_depth()
+        with state.lock:
+            if (depth <= 0 or state.stopped
+                    or state.observed >= state.cfg.budget):
+                return
+            if state.pump is not None and state.pump.alive:
+                return
+            state.pump = SuggestionPump(
+                state, exp_id, depth,
+                lambda a: self._mint(state, a)).start()
+
+    def _drain_sync(self, state: _ExperimentState) -> None:
+        """Apply deferred optimizer ops inline — the no-pump path keeps
+        the pre-pipeline synchronous semantics (tells/forgets visible the
+        moment observe/release returns)."""
+        with state.opt_lock:
+            drain_ops(state)
+
+    def _suggest_miss(self, state: _ExperimentState,
+                      need: int) -> List[Suggestion]:
+        """Queue-dry fallback: park a miss slot and race for the optimizer
+        lock; whoever wins serves every parked slot with one batched
+        ``ask`` (cross-scheduler coalescing).  Losers just wait — their
+        suggestions are computed by the winner (or the pump)."""
+        slot = MissSlot(need)
+        with state.lock:
+            if state.stopped:
+                return []
+            state.miss_slots.append(slot)
+        while not slot.done:
+            if state.opt_lock.acquire(timeout=0.02):
+                try:
+                    if not slot.done:
+                        serve_misses(state, lambda a: self._mint(state, a))
+                finally:
+                    state.opt_lock.release()
+            else:
+                slot.event.wait(0.02)
+        return slot.result
+
     # ------------------------------------------------------ suggest/observe
     def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
         state = self._state(exp_id)
+        self._ensure_pump(exp_id, state)
         with state.lock:
             if state.stopped:
                 return SuggestBatch([], remaining=0)
             headroom = (state.cfg.budget - state.observed
                         - len(state.pending))
-            n = max(0, min(count, headroom))
-            batch = []
-            if n:
-                for a in state.optimizer.ask(n):
-                    s = Suggestion(state.next_suggestion_id(), a)
-                    state.pending[s.suggestion_id] = s
-                    batch.append(s)
+            n = max(0, min(int(count), headroom))
+            fresh, stale = pop_prefetched(state, n)
+            batch = [self._mint(state, a) for a in fresh]
+            need = n - len(batch)
+            if stale:
+                state.ops.extend(("forget", a) for a in stale)
+            pump = state.pump
+            refill = len(state.queue) < state.pump_depth()
+        if pump is not None and pump.alive:
+            if refill or stale or need:
+                pump.wake()
+        elif stale:
+            self._drain_sync(state)
+        if need > 0:
+            batch.extend(self._suggest_miss(state, need))
+        with state.lock:
             remaining = (state.cfg.budget - state.observed
                          - len(state.pending))
-            return SuggestBatch(batch, remaining=max(0, remaining))
+        return SuggestBatch(batch, remaining=max(0, remaining))
 
     def observe(self, req: ObserveRequest) -> ObserveResponse:
         state = self._state(req.exp_id)
+        obs = Observation(req.assignment, req.value, req.stddev,
+                          req.failed, dict(req.metadata))
         with state.lock:
             if req.suggestion_id in state.closed:
                 return ObserveResponse(accepted=False, duplicate=True,
@@ -203,25 +339,74 @@ class LocalClient(SuggestionClient):
                 # (a straggler must not flip 'deleted' back to 'complete')
                 return ObserveResponse(accepted=False, duplicate=False,
                                        observations=state.observed)
+            state.closed.add(req.suggestion_id)
+            # the model fold is deferred: the pump (or the next optimizer-
+            # lock holder) absorbs it off this hot path.  Enqueued BEFORE
+            # the log append: a concurrent live resume drains this op
+            # (under opt_lock) before replaying the log, so whether or not
+            # its load sees the append below, the optimizer absorbs this
+            # observation exactly once (restore only replays the tail
+            # beyond len(history)).
+            state.ops.append(("tell", obs))
+            state.appends += 1
+        # system-of-record append OUTSIDE the experiment lock (the store
+        # serializes its own handles): holding the lock across file I/O
+        # would make every concurrent queue pop wait on a flush.  The
+        # closed-set insert above already de-duplicated; the suggestion
+        # stays *pending* until the same lock section that increments
+        # ``observed``, so budget headroom never transiently inflates.
+        # ``appends`` marks the append-to-accounting window so a live
+        # resume (create_experiment) can quiesce in-flight observes
+        # before deriving counters from the log.
+        try:
+            self.store.append_observation(req.exp_id, obs, req.trial_id)
+        except BaseException:
+            with state.lock:
+                state.appends -= 1
+                state.append_cv.notify_all()
+            raise
+        with state.lock:
             # tolerate untracked ids (service restart lost the pending set)
             state.pending.pop(req.suggestion_id, None)
-            state.closed.add(req.suggestion_id)
-            obs = Observation(req.assignment, req.value, req.stddev,
-                              req.failed, dict(req.metadata))
-            state.optimizer.tell([obs])
-            self.store.append_observation(req.exp_id, obs, req.trial_id)
             state.observed += 1
+            state.appends -= 1
+            state.append_cv.notify_all()
             if req.failed:
                 state.failures += 1
-            best = state.optimizer.best()
+            if (not obs.failed and obs.value is not None
+                    and (state.best is None
+                         or obs.value > state.best.value)):
+                state.best = obs
             fields = dict(observations=state.observed,
                           failures=state.failures,
-                          best=_public_best(best))
-            if state.observed >= state.cfg.budget:
-                fields["state"] = "complete"
+                          best=_public_best(state.best))
+            complete = state.observed >= state.cfg.budget
+            observed = state.observed
+            pump = state.pump
+        if complete:
+            fields["state"] = "complete"
             self.store.update_status(req.exp_id, **fields)
-            return ObserveResponse(accepted=True, duplicate=False,
-                                   observations=state.observed)
+        else:
+            self._mirror_status(req.exp_id, state, fields)
+        if pump is not None and pump.alive:
+            pump.wake()     # fold + staleness sweep + refill
+        else:
+            self._drain_sync(state)
+        return ObserveResponse(accepted=True, duplicate=False,
+                               observations=observed)
+
+    def _mirror_status(self, exp_id: str, state: _ExperimentState,
+                       fields: Dict) -> None:
+        """Throttled status.json mirror: the in-memory state (and the
+        observation log) are authoritative; the mirror exists for cold
+        reads and need not be written per observation under contention.
+        Terminal transitions bypass this and always write."""
+        now = time.monotonic()
+        with state.lock:
+            if now - state.last_mirror < 0.05:
+                return
+            state.last_mirror = now
+        self.store.update_status(exp_id, **fields)
 
     def report(self, req: ReportRequest) -> Decision:
         """Trial-events hot path: append the progress point to the trial's
@@ -261,24 +446,48 @@ class LocalClient(SuggestionClient):
             if s is not None:
                 # never coming back: let the optimizer drop its
                 # constant-liar bookkeeping for this point
-                state.optimizer.forget(s.assignment)
-            return s is not None
+                state.ops.append(("forget", s.assignment))
+            pump = state.pump
+        if s is not None:
+            if pump is not None and pump.alive:
+                pump.wake()
+            else:
+                self._drain_sync(state)
+        return s is not None
 
     # -------------------------------------------------------------- queries
     def status(self, exp_id: str) -> StatusResponse:
         with self._lock:
             state = self._exps.get(exp_id)
-        if state is not None:
-            with state.lock:
-                st = self.store.get_status(exp_id)
-                best = state.optimizer.best()
-                return StatusResponse(
-                    exp_id=exp_id, state=st.get("state", "pending"),
-                    name=state.cfg.name, budget=state.cfg.budget,
-                    observations=state.observed, failures=state.failures,
-                    pending=len(state.pending),
-                    best=_public_best(best))
-        return self._status_from_store(exp_id)
+        if state is None:
+            return self._status_from_store(exp_id)
+        # freshness + terminal hygiene: fold deferred observations, and
+        # once the experiment can't serve again (stopped / budget spent)
+        # retire the speculative queue's constant-liar lies.  Skipped
+        # entirely when there is nothing to do — the common monitoring
+        # read stays off the optimizer lock (a pump mid-fit must not
+        # stall a GET /status).
+        with state.lock:
+            dirty = bool(state.ops) or bool(
+                state.queue and (state.stopped
+                                 or state.observed >= state.cfg.budget))
+        if dirty:
+            with state.opt_lock:
+                drain_ops(state)
+                retire_queue(state, terminal_only=True)
+        with state.lock:
+            st = self.store.get_status(exp_id)
+            pump = state.pump
+            pump_stats = dict(state.stats,
+                              alive=bool(pump is not None and pump.alive),
+                              depth=state.pump_depth())
+            return StatusResponse(
+                exp_id=exp_id, state=st.get("state", "pending"),
+                name=state.cfg.name, budget=state.cfg.budget,
+                observations=state.observed, failures=state.failures,
+                pending=len(state.pending),
+                best=_public_best(state.best),
+                prefetched=len(state.queue), pump=pump_stats)
 
     def _status_from_store(self, exp_id: str) -> StatusResponse:
         """Cold path: experiment not live in this process — answer from
@@ -303,9 +512,22 @@ class LocalClient(SuggestionClient):
         if exp is not None:
             with exp.lock:
                 exp.stopped = True
-                for s in exp.pending.values():
-                    exp.optimizer.forget(s.assignment)
-                exp.pending.clear()
+                pump = exp.pump
+            if pump is not None:
+                pump.stop(join=True)    # no new speculation after this
+            with exp.opt_lock:
+                drain_ops(exp)          # folds are real data — keep them
+                retire_queue(exp)       # stopped: flush unconditionally
+                with exp.lock:
+                    doomed = [s.assignment for s in exp.pending.values()]
+                    exp.pending.clear()
+                    # unblock any parked miss slots with empty batches
+                    slots, exp.miss_slots = exp.miss_slots, []
+                    for sl in slots:
+                        sl.done = True
+                        sl.event.set()
+                for a in doomed:
+                    exp.optimizer.forget(a)
         elif not (self.store.exp_dir(exp_id) / "config.json").exists():
             raise ApiError(E_UNKNOWN_EXPERIMENT, f"no experiment {exp_id!r}")
         self.store.update_status(exp_id, state=state)
@@ -313,3 +535,15 @@ class LocalClient(SuggestionClient):
 
     def best_response(self, exp_id: str) -> BestResponse:
         return BestResponse(best=self.status(exp_id).best)
+
+    def close(self) -> None:
+        """Wind down every experiment's pump (service shutdown).  Leaves
+        experiment state resumable: a later ``suggest``/``create`` simply
+        restarts the pump."""
+        with self._lock:
+            states = list(self._exps.values())
+        for st in states:
+            with st.lock:
+                pump = st.pump
+            if pump is not None:
+                pump.stop(join=True)

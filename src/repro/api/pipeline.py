@@ -1,0 +1,343 @@
+"""Service-side asynchronous suggestion pipeline (prefetch pump + miss
+coalescing) — the machinery that makes ``LocalClient.suggest`` latency
+independent of model cost.
+
+Three cooperating pieces (all operating on one ``_ExperimentState``):
+
+* **Prefetch pump** (`SuggestionPump`): a per-experiment background thread
+  that keeps a bounded queue of speculative suggestions warm.  Each queued
+  suggestion was produced by a real ``ask()`` (so it carries its
+  constant-liar ``__lie`` token and EI already accounts for it); the pump
+  also absorbs the *deferred optimizer work* — observation folds,
+  hyperparameter refits, lie retirement — that ``observe``/``release``
+  only enqueue.  Cold-start XLA compile cost is moved off-path too: the
+  pump prewarms the power-of-two GP shape buckets at start and again
+  before the history crosses into the next bucket.
+
+* **Miss coalescing** (`serve_misses`): concurrent ``suggest`` calls that
+  find the queue dry park a `MissSlot` and race for the optimizer lock;
+  the winner serves *every* parked slot with a single batched ``ask(n)``
+  instead of N serialized model fits.  Losers wait on their slot's event
+  — they never touch the optimizer.
+
+* **Staleness bound**: every queued suggestion remembers the observation
+  count it was computed at (``born_obs``).  Once ``staleness`` (K) new
+  observations have arrived, the suggestion is *invalidated* — dropped at
+  pop time (and proactively by the pump), its constant-liar lie retired —
+  so a warm queue can never serve a point the model has since learned to
+  avoid.
+
+Locking protocol (shared with ``repro.api.local``): ``state.opt_lock``
+serializes all optimizer access (ask/tell/forget/restore) and must be
+acquired *before* ``state.lock`` (cheap bookkeeping) when both are held.
+``state.ops`` — the deferred tell/forget queue — is only ever popped
+while holding ``opt_lock`` (see ``drain_ops``), which is what makes
+create/resume's "drain then replay the log tail" sequence race-free.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List
+
+#: Largest ``ask`` the pipeline issues per optimizer-lock hold (pump
+#: refill ticks and coalesced miss rounds alike).  Bounds lock latency
+#: (a request arriving mid-batch waits one chunk, not one queue fill)
+#: and pins the q-EI scan shapes to the power-of-two pads <= 8 — exactly
+#: what ``prewarm`` compiles, so no batch size ever pays a first-touch
+#: scan compile on the request path.  Coalesced misses beyond a chunk
+#: stay parked and are served by the next lock winner in ~one cheap
+#: recondition+scan round each (hyperfits are deferred to the pump).
+#: Only a single ``suggest(count > 8)`` call exceeds the chunk.
+ASK_CHUNK = 8
+
+
+class PrefetchItem:
+    """One speculative suggestion waiting in the pump queue."""
+    __slots__ = ("assignment", "born_obs")
+
+    def __init__(self, assignment: Dict[str, Any], born_obs: int):
+        self.assignment = assignment
+        self.born_obs = born_obs
+
+
+class MissSlot:
+    """A ``suggest`` call waiting out a queue miss.  Filled (with up to
+    ``need`` suggestions — possibly fewer, budget permitting) by whichever
+    thread wins the optimizer lock and serves the coalesced batch."""
+    __slots__ = ("need", "event", "result", "done")
+
+    def __init__(self, need: int):
+        self.need = need
+        self.event = threading.Event()
+        self.result: List[Any] = []
+        self.done = False
+
+
+def drain_ops(state) -> int:
+    """Apply the deferred optimizer operations (observation folds and lie
+    retirements that ``observe``/``release`` enqueued).  MUST be called
+    with ``state.opt_lock`` held; pops under ``state.lock`` so no op is
+    ever in flight outside both locks.  Returns the number applied."""
+    with state.lock:
+        ops, state.ops = state.ops, []
+    if not ops:
+        return 0
+    tells: List[Any] = []
+    for kind, payload in ops:
+        if kind == "tell":
+            tells.append(payload)
+        else:                           # "forget"
+            if tells:
+                state.optimizer.tell(tells)
+                tells = []
+            state.optimizer.forget(payload)
+    if tells:
+        state.optimizer.tell(tells)
+    return len(ops)
+
+
+def pop_prefetched(state, want: int):
+    """Pop up to ``want`` fresh queue items; returns (assignments, stale
+    assignments).  MUST be called with ``state.lock`` held.  Stale items
+    (older than the K-observation staleness bound) are skimmed off and
+    returned for lie retirement — they are never served."""
+    fresh: List[Dict[str, Any]] = []
+    stale: List[Dict[str, Any]] = []
+    while state.queue and len(fresh) < want:
+        # LIFO: always serve the *freshest* speculation — it was computed
+        # against the most observations.  Older entries age toward the
+        # staleness bound at the front and are swept by the pump.
+        item = state.queue.pop()
+        if state.observed - item.born_obs >= state.staleness:
+            stale.append(item.assignment)
+        else:
+            fresh.append(item.assignment)
+    if stale:
+        state.stats["invalidated"] += len(stale)
+    if fresh:
+        state.stats["hits"] += len(fresh)
+    return fresh, stale
+
+
+def retire_queue(state, terminal_only: bool = False) -> int:
+    """Flush the prefetch queue and retire its constant-liar lies.  MUST
+    be called with ``state.opt_lock`` held.  With ``terminal_only`` the
+    flush only happens once the experiment can't serve again (stopped or
+    budget spent) — the shared hygiene used by the pump's wind-down,
+    ``status()`` and ``stop()``.  Returns the number retired."""
+    with state.lock:
+        if terminal_only and not (state.stopped
+                                  or state.observed >= state.cfg.budget):
+            return 0
+        doomed = [i.assignment for i in state.queue]
+        state.queue = []
+        if doomed:
+            state.stats["invalidated"] += len(doomed)
+    for a in doomed:
+        state.optimizer.forget(a)
+    return len(doomed)
+
+
+def serve_misses(state, make_suggestion: Callable[[Dict[str, Any]], Any]) -> int:
+    """Serve parked `MissSlot`s with ONE batched ``ask`` (cross-scheduler
+    request coalescing: concurrent queue misses share one model pass, not
+    N serialized ones).  MUST be called with ``state.opt_lock`` held.
+    ``make_suggestion`` mints a pending Suggestion from an assignment —
+    called under ``state.lock``.  A round serves up to ``ASK_CHUNK``
+    suggestions (the first slot is always taken whole); overflow slots
+    stay parked for the next lock winner — usually their own waiting
+    thread's retry loop.  Returns the number of slots served."""
+    drain_ops(state)
+    with state.lock:
+        waiting = [s for s in state.miss_slots if not s.done]
+        slots, acc = [], 0
+        for s in waiting:
+            if slots and acc + s.need > ASK_CHUNK:
+                break
+            slots.append(s)
+            acc += s.need
+        state.miss_slots = waiting[len(slots):]
+        if not slots:
+            return 0
+        if state.stopped:
+            total = 0
+        else:
+            headroom = (state.cfg.budget - state.observed
+                        - len(state.pending))
+            total = min(sum(s.need for s in slots), max(0, headroom))
+    assigns = state.optimizer.ask(total) if total > 0 else []
+    with state.lock:
+        # headroom may have shrunk while we computed (queue pops register
+        # pending under state.lock only) — never overdraw the budget
+        headroom = state.cfg.budget - state.observed - len(state.pending)
+        if state.stopped:
+            headroom = 0
+        usable = assigns[:max(0, headroom)]
+        extra = assigns[len(usable):]
+        i = 0
+        for slot in slots:
+            take = usable[i:i + slot.need]
+            i += len(take)
+            slot.result = [make_suggestion(a) for a in take]
+            slot.done = True
+            slot.event.set()
+        extra.extend(usable[i:])
+        if len(slots) > 1:
+            state.stats["coalesced"] += len(slots) - 1
+        state.stats["misses"] += len(slots)
+    for a in extra:     # opt_lock still held
+        state.optimizer.forget(a)
+    return len(slots)
+
+
+class SuggestionPump:
+    """Per-experiment background worker: folds deferred observations,
+    refits the model, prewarms compile buckets, invalidates stale queue
+    entries, and keeps the prefetch queue at ``depth``.  Owns no locks of
+    its own — it speaks the same ``opt_lock``/``state.lock`` protocol as
+    the request path, always acquiring ``opt_lock`` with a timeout so
+    ``stop()`` stays responsive even mid-fit."""
+
+    #: fallback poll period — wakes are event-driven (observe/suggest/stop)
+    IDLE_WAIT = 0.25
+
+    def __init__(self, state, exp_id: str, depth: int,
+                 make_suggestion: Callable[[Dict[str, Any]], Any]):
+        self.state = state
+        self.exp_id = exp_id
+        self.depth = depth
+        self.make_suggestion = make_suggestion
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._prewarm_goal = 0
+        self._thread = threading.Thread(
+            target=self._run, name=f"suggest-pump-{exp_id}", daemon=True)
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "SuggestionPump":
+        self._thread.start()
+        return self
+
+    def wake(self) -> None:
+        self._wake.set()
+
+    def stop(self, join: bool = True, timeout: float = 10.0) -> None:
+        self._stop.set()
+        self._wake.set()
+        if join and self._thread.is_alive() \
+                and self._thread is not threading.current_thread():
+            self._thread.join(timeout)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive() and not self._stop.is_set()
+
+    # ------------------------------------------------------------ internals
+    def _run(self) -> None:
+        state = self.state
+        # pipeline mode: ask() folds new data by cheap recondition; the
+        # hyperparameter refits run here, in maintain(), when quiet
+        state.optimizer.defer_fits = True
+        try:
+            self._prewarm()
+            while not self._stop.is_set():
+                busy = self._tick()
+                if self._stop.is_set() or self._finished():
+                    break
+                if not busy:
+                    self._wake.wait(self.IDLE_WAIT)
+                    self._wake.clear()
+        except Exception as e:  # noqa: pump death must not kill the service
+            with state.lock:
+                state.stats["pump_error"] = f"{type(e).__name__}: {e}"
+        finally:
+            # back to synchronous semantics for any pump-less aftermath
+            state.optimizer.defer_fits = False
+
+    def _finished(self) -> bool:
+        state = self.state
+        with state.lock:
+            return state.stopped or state.observed >= state.cfg.budget
+
+    def _prewarm(self) -> None:
+        """Compile the shape buckets the near-term asks will need.  Reads
+        only immutable optimizer config + jit caches — runs without
+        ``opt_lock`` so the first suggests aren't blocked behind compiles."""
+        state = self.state
+        with state.lock:
+            n = (state.observed + len(state.pending) + len(state.queue)
+                 + self.depth + 8)
+            goal = min(max(n, 1), state.cfg.budget + self.depth)
+        if goal <= self._prewarm_goal:
+            return
+        self._prewarm_goal = goal
+        warmed = state.optimizer.prewarm(goal, batch=min(self.depth, 8))
+        if warmed:
+            with state.lock:
+                state.stats["prewarmed"] += warmed
+
+    def _tick(self) -> bool:
+        """One unit of pump work; returns True when anything was done (the
+        loop re-ticks immediately) and False to idle-wait."""
+        state = self.state
+        self._prewarm()     # cheap no-op once the goal bucket is compiled
+        if not state.opt_lock.acquire(timeout=0.1):
+            return True     # contended: re-check stop flag, then retry
+        try:
+            if self._stop.is_set():
+                return False
+            busy = drain_ops(state) > 0
+            # a parked miss means the queue is already dry — serve it first
+            busy = serve_misses(state, self.make_suggestion) > 0 or busy
+            # terminal: nothing more will be served — retire the whole
+            # queue's lies and let the thread wind down
+            retired = retire_queue(state, terminal_only=True)
+            # prune stale speculation, then top the queue back up
+            with state.lock:
+                stale = [i.assignment for i in state.queue
+                         if state.observed - i.born_obs >= state.staleness]
+                if stale:
+                    state.queue = [
+                        i for i in state.queue
+                        if state.observed - i.born_obs < state.staleness]
+                    state.stats["invalidated"] += len(stale)
+                if state.stopped or state.observed >= state.cfg.budget:
+                    want = 0
+                else:
+                    headroom = (state.cfg.budget - state.observed
+                                - len(state.pending) - len(state.queue))
+                    # chunked refill: bounded lock hold + bounded q-EI
+                    # scan shapes; the loop re-ticks until at depth
+                    want = min(self.depth - len(state.queue),
+                               max(0, headroom), ASK_CHUNK)
+            for a in stale:
+                state.optimizer.forget(a)
+            swept = bool(stale) or retired > 0
+            if want <= 0:
+                # queue is at depth: the quiet moment to pay the owed
+                # hyperparameter refit, off the request path
+                with state.lock:
+                    quiet = not state.miss_slots
+                if quiet and state.optimizer.maintain():
+                    with state.lock:
+                        state.stats["maintained"] = (
+                            state.stats.get("maintained", 0) + 1)
+                    return True
+                return busy or swept
+            assigns = state.optimizer.ask(want)
+            with state.lock:
+                if state.stopped or state.observed >= state.cfg.budget:
+                    take = []
+                else:
+                    headroom = (state.cfg.budget - state.observed
+                                - len(state.pending) - len(state.queue))
+                    take = assigns[:max(0, headroom)]
+                state.queue.extend(
+                    PrefetchItem(a, state.observed) for a in take)
+                state.stats["prefilled"] += len(take)
+                extra = assigns[len(take):]
+            for a in extra:
+                state.optimizer.forget(a)
+            return True
+        finally:
+            state.opt_lock.release()

@@ -312,6 +312,12 @@ class StatusRequest:
 
 @dataclass
 class StatusResponse:
+    """``prefetched``/``pump`` describe the suggestion pipeline (additive
+    v1 fields, API.md §Suggestion pipeline): ``prefetched`` is the number
+    of pre-computed suggestions currently warm in the prefetch queue, and
+    ``pump`` carries the pump's counters (hits, misses, coalesced,
+    invalidated, prefilled, prewarmed, alive, depth) or ``None`` for a
+    non-live experiment."""
     exp_id: str
     state: str = "pending"
     name: str = ""
@@ -320,19 +326,23 @@ class StatusResponse:
     failures: int = 0
     pending: int = 0
     best: Optional[Dict[str, Any]] = None   # Observation.to_json()
+    prefetched: int = 0
+    pump: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
         return {"exp_id": self.exp_id, "state": self.state, "name": self.name,
                 "budget": self.budget, "observations": self.observations,
                 "failures": self.failures, "pending": self.pending,
-                "best": self.best}
+                "best": self.best, "prefetched": self.prefetched,
+                "pump": self.pump}
 
     @classmethod
     def from_json(cls, d) -> "StatusResponse":
         return cls(d.get("exp_id", ""), d.get("state", "pending"),
                    d.get("name", ""), d.get("budget", 0),
                    d.get("observations", 0), d.get("failures", 0),
-                   d.get("pending", 0), d.get("best"))
+                   d.get("pending", 0), d.get("best"),
+                   d.get("prefetched", 0), d.get("pump"))
 
 
 @dataclass

@@ -55,6 +55,13 @@ class ExperimentConfig:
     report_every: int = 1                  # min step delta between service
                                            # reports (rung crossings always
                                            # go through — see Scheduler)
+    prefetch: Optional[int] = None         # suggestion-pipeline queue depth
+                                           # (None = auto: pump on for
+                                           # model-based optimizers only;
+                                           # 0 = fully synchronous)
+    staleness: int = 8                     # K: prefetched suggestions are
+                                           # invalidated after K new
+                                           # observations
     entrypoint: Optional[str] = None       # "module:function" for CLI runs
     seed: int = 0
 
@@ -69,6 +76,8 @@ class ExperimentConfig:
             "straggler_factor": self.straggler_factor,
             "early_stop": self.early_stop,
             "report_every": self.report_every,
+            "prefetch": self.prefetch,
+            "staleness": self.staleness,
             "entrypoint": self.entrypoint,
             "seed": self.seed,
         }
@@ -88,6 +97,9 @@ class ExperimentConfig:
             straggler_factor=float(d.get("straggler_factor", 0.0)),
             early_stop=d.get("early_stop"),
             report_every=int(d.get("report_every", 1)),
+            prefetch=(None if d.get("prefetch") is None
+                      else int(d["prefetch"])),
+            staleness=int(d.get("staleness", 8)),
             entrypoint=d.get("entrypoint"), seed=int(d.get("seed", 0)))
 
 

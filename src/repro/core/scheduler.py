@@ -236,6 +236,7 @@ class Scheduler:
                 self._harvest()
                 self._fill_slots(pool)
                 self._maybe_speculate(pool)
+                self._prefetch_ahead()
                 if not self._running and not self._requeue:
                     # other workers may hold the remaining budget, or the
                     # experiment may have been stopped service-side: re-sync
@@ -354,6 +355,32 @@ class Scheduler:
             return
         for spec in self._next_specs(want):
             self._launch(pool, spec)
+
+    def _prefetch_ahead(self) -> None:
+        """Pipelined next-suggestion fetch (opt-in via ``cfg.prefetch``):
+        while every slot is busy, pull ONE spec ahead of need into the
+        local requeue so the next freed slot launches immediately instead
+        of paying a service round trip first.  The spec's suggestion stays
+        pending service-side; shutdown releases it like any requeued spec."""
+        if not self.cfg.prefetch or self._stop.is_set():
+            return
+        if self._requeue or self._in_flight() < self.cfg.parallel:
+            return
+        if self._pending_budget() <= 0 \
+                or time.time() < self._suggest_retry_at:
+            return
+        try:
+            batch = self.client.suggest(self.exp_id, 1)
+        except ApiError:
+            self._suggest_retry_at = time.time() + 0.5
+            return
+        if not batch.suggestions:
+            self._suggest_retry_at = time.time() + 0.05
+        for s in batch.suggestions:
+            self._trial_seq += 1
+            self._requeue.append(TrialSpec(f"t{self._trial_seq:04d}",
+                                           s.assignment,
+                                           suggestion_id=s.suggestion_id))
 
     def _launch(self, pool: ThreadPoolExecutor, spec: TrialSpec,
                 speculative_of: Optional[str] = None) -> bool:

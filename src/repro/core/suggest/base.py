@@ -39,6 +39,10 @@ class Observation:
 
 
 class Optimizer(abc.ABC):
+    #: True when ``ask`` costs enough (model fit / compile) that the
+    #: suggestion service should run its prefetch pump for this optimizer.
+    expensive_ask: bool = False
+
     def __init__(self, space: Space, seed: int = 0):
         self.space = space
         self.rng = np.random.default_rng(seed)
@@ -59,6 +63,23 @@ class Optimizer(abc.ABC):
         """A previously-asked suggestion will never be observed (released
         back to the budget / experiment stopped): optimizers may drop any
         per-suggestion bookkeeping (e.g. constant-liar lies)."""
+
+    def prewarm(self, max_history: int, batch: int = 8) -> int:
+        """Move one-time setup cost (XLA compiles of the ask path) off the
+        request path, sized for up to ``max_history`` observations and
+        ``ask(batch)``-shaped requests.  Called by the suggestion
+        service's prefetch pump at experiment creation and again as the
+        history approaches the next shape bucket.  Returns the number of
+        shape buckets newly warmed (0 = nothing to do)."""
+        return 0
+
+    def maintain(self) -> bool:
+        """Perform deferred model maintenance (e.g. a pending
+        hyperparameter refit) — the slow work a ``defer_fits`` optimizer
+        keeps off the ``ask`` path.  Called by the suggestion service's
+        pump when no request is waiting on the optimizer.  Returns True
+        when work was done (callers may loop)."""
+        return False
 
     # ------------------------------------------------------------ helpers
     @property

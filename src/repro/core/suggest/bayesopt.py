@@ -33,6 +33,8 @@ LIE_KEY = "__lie"
 @register("gp")
 @register("bayesopt")
 class BayesOpt(Optimizer):
+    expensive_ask = True        # service runs the prefetch pump for us
+
     def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
                  candidates: int = 1024, fit_steps: int = 150,
                  warm_fit_steps: int = 40, refit_every: int = 4):
@@ -55,8 +57,42 @@ class BayesOpt(Optimizer):
         self._lie_seq = 0
         self._xs: List[np.ndarray] = []        # unit coords of successes
         self._ys: List[float] = []
+        self._prewarmed = 0                    # largest bucket compiled
+        # Service pipeline mode (set by the prefetch pump): ask() never
+        # runs a hyperparameter fit once warm-started — new observations
+        # are folded by an exact recondition at the current
+        # hyperparameters (one O(b³) Cholesky), and the owed refit runs
+        # later in maintain() on the pump thread.  Default False: the
+        # raw ask/tell contract (one warm fit per ask batch) is unchanged.
+        self.defer_fits = False
 
     # ------------------------------------------------------------------
+    def prewarm(self, max_history: int, batch: int = 8) -> int:
+        """Compile the jitted GP kernels for every power-of-two bucket up
+        to ``bucket_size(max_history)`` (both the cold and warm fit-step
+        variants, the rank-1 appends, and the q-EI scan for every batch
+        pad up to ``batch``).  Touches no optimizer state — safe to call
+        from a background thread while ``ask``/``tell`` run elsewhere,
+        since jitted functions cache per shape signature process-wide."""
+        target = gp.bucket_size(max(1, int(max_history)))
+        k_pads, kp = [], 1
+        pad_max = 1 << max(0, int(batch) - 1).bit_length()
+        while kp <= pad_max:
+            k_pads.append(kp)
+            kp *= 2
+        m = self.n_candidates + self.n_candidates // 4
+        warmed = 0
+        b = gp.MIN_BUCKET
+        while b <= target:
+            if b > self._prewarmed:
+                gp.prewarm_bucket(len(self.space), b,
+                                  fit_steps=(self.fit_steps,
+                                             self.warm_fit_steps),
+                                  k_pads=k_pads, n_cand=m)
+                warmed += 1
+            b *= 2
+        self._prewarmed = max(self._prewarmed, target)
+        return warmed
     def _new_lie(self, u: np.ndarray) -> str:
         self._lie_seq += 1
         key = f"lie-{self._lie_nonce}-{self._lie_seq:05d}"
@@ -110,15 +146,28 @@ class BayesOpt(Optimizer):
         self._n_in_post = len(x) + len(self._pending)
         self._needs_recondition = False
 
+    def maintain(self) -> bool:
+        """Run the owed hyperparameter refit, if any (``defer_fits``
+        mode).  The service pump calls this off the request path."""
+        if self._needs_fit and len(self._ys) >= max(2, len(self.space)):
+            self._refit()
+            return True
+        return False
+
     def ask(self, n: int = 1) -> List[Assignment]:
         n = int(n)
         if n <= 0:
             return []
         if len(self._ys) < max(self.n_init, 2, len(self.space)):
             return self._ask_random(n)
-        if self._post is None or self._needs_fit:
+        if self._post is None or (self._needs_fit
+                                  and not (self.defer_fits
+                                           and self._params is not None)):
             self._refit(extra=n)
-        elif self._needs_recondition or self._free_slots() < n:
+        elif (self._needs_fit or self._needs_recondition
+                or self._free_slots() < n):
+            # deferred-fit mode: fold the new observations exactly at the
+            # current hyperparameters; maintain() pays the fit later
             self._recondition(extra=n)
         if self._post is None:
             return self._ask_random(n)

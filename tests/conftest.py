@@ -9,3 +9,6 @@ if str(SRC) not in sys.path:
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers", "contention: multi-client service stress test (skipped "
+        "unless REPRO_CONTENTION=1; run by scripts/ci.sh tier-2)")

@@ -74,9 +74,12 @@ def test_local_pending_tracking_caps_budget():
 
 def test_release_and_stop_retire_constant_liar_lies():
     """A released (or stopped) GP suggestion must drop its pending lie —
-    otherwise every refit re-folds a point that will never be observed."""
+    otherwise every refit re-folds a point that will never be observed.
+    Pins ``prefetch=0``: this asserts exact synchronous lie counts, which
+    the prefetch pump's speculative asks would (correctly) perturb — the
+    pipelined equivalents live in tests/test_pipeline.py."""
     client = LocalClient(tempfile.mkdtemp())
-    cfg = _cfg(budget=30, optimizer="gp",
+    cfg = _cfg(budget=30, optimizer="gp", prefetch=0,
                optimizer_options={"n_init": 2, "fit_steps": 30})
     exp = _create(client, cfg).exp_id
     for i in range(4):

@@ -1,0 +1,368 @@
+"""Suggestion-pipeline correctness (ISSUE 4): prefetch pump, queue-miss
+coalescing, K-observation staleness invalidation, and drain semantics on
+``stop()`` / service restart.
+
+The multi-client contention stress tests are marked ``contention`` and
+skipped in tier-1 (they hammer the service with thread fleets); CI runs
+them behind the tier-2 gate via ``REPRO_CONTENTION=1`` (scripts/ci.sh).
+"""
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import (CreateExperiment, HTTPClient, LocalClient,
+                       ObserveRequest, serve_api)
+from repro.core.experiment import ExperimentConfig
+from repro.core.space import Param, Space
+
+def contention(fn):
+    """Marks a multi-client stress test: tier-2 only (scripts/ci.sh sets
+    REPRO_CONTENTION=1 and selects ``-m contention``)."""
+    fn = pytest.mark.contention(fn)
+    return pytest.mark.skipif(
+        not os.environ.get("REPRO_CONTENTION"),
+        reason="contention stress (tier-2; set REPRO_CONTENTION=1)")(fn)
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg(**kw):
+    kw.setdefault("name", "pipe")
+    kw.setdefault("optimizer", "random")
+    kw.setdefault("parallel", 4)
+    kw.setdefault("space", _space())
+    return ExperimentConfig(**kw)
+
+
+def _create(client, cfg, exp_id=None):
+    return client.create_experiment(
+        CreateExperiment(config=cfg.to_json(), exp_id=exp_id))
+
+
+def _wait(predicate, timeout=10.0, every=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if predicate():
+            return True
+        time.sleep(every)
+    return predicate()
+
+
+def _fill(client, exp, depth, timeout=10.0):
+    assert _wait(lambda: client.status(exp).prefetched >= depth, timeout), \
+        f"pump never filled the queue: {client.status(exp).pump}"
+
+
+# -------------------------------------------------------------- fast paths
+def test_suggest_pops_from_warm_queue():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=50, prefetch=6)).exp_id
+    _fill(client, exp, 6)
+    batch = client.suggest(exp, 3)
+    assert len(batch) == 3
+    st = client.status(exp)
+    assert st.pending == 3
+    assert st.pump["hits"] == 3 and st.pump["misses"] == 0
+    ids = {s.suggestion_id for s in batch.suggestions}
+    assert len(ids) == 3
+
+
+def test_pump_respects_budget_headroom():
+    """The queue is speculation, not budget: prefetched suggestions are
+    not pending, and queue+pending+observed never oversubscribe."""
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=4, prefetch=16)).exp_id
+    _fill(client, exp, 4)
+    st = client.status(exp)
+    assert st.prefetched == 4, "queue must stop at budget headroom"
+    b = client.suggest(exp, 10)
+    assert len(b) == 4 and b.remaining == 0
+    assert len(client.suggest(exp, 1)) == 0
+    st = client.status(exp)
+    assert st.pending == 4 and st.observations == 0
+
+
+def test_concurrent_suggest_unique_ids_and_budget():
+    """No duplicate suggestion_ids under concurrent pipelined suggest;
+    observed + pending never exceeds the budget."""
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=48, prefetch=8)).exp_id
+    out, lock = [], threading.Lock()
+
+    def worker():
+        got = []
+        for _ in range(3):
+            got.extend(client.suggest(exp, 2).suggestions)
+        with lock:
+            out.extend(got)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ids = [s.suggestion_id for s in out]
+    assert len(ids) == 48 and len(set(ids)) == 48
+    st = client.status(exp)
+    assert st.observations + st.pending <= 48
+
+
+def test_queue_misses_coalesce_into_batched_ask():
+    """Concurrent queue misses must be served by few batched asks, not N
+    serialized ones (cross-scheduler request coalescing)."""
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=64, prefetch=0)).exp_id
+    state = client._exps[exp]
+    calls = []
+    orig = state.optimizer.ask
+
+    def slow_ask(n):
+        calls.append(n)
+        time.sleep(0.05)        # model cost: concurrent misses pile up
+        return orig(n)
+
+    state.optimizer.ask = slow_ask
+    out, lock = [], threading.Lock()
+
+    def worker():
+        got = client.suggest(exp, 1).suggestions
+        with lock:
+            out.extend(got)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ids = [s.suggestion_id for s in out]
+    assert len(ids) == 8 and len(set(ids)) == 8
+    assert len(calls) < 8, f"misses did not coalesce: {calls}"
+    assert sum(calls) == 8, "coalesced asks must cover every miss exactly"
+    assert client.status(exp).pump["coalesced"] > 0
+
+
+# -------------------------------------------------------------- staleness
+def test_stale_prefetched_suggestions_never_served():
+    """A queued suggestion computed K observations ago is invalidated at
+    pop time — the model has since learned; serving it would waste a
+    budget slot on a known-bad region."""
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=100, prefetch=4, staleness=2)).exp_id
+    _fill(client, exp, 4)
+    state = client._exps[exp]
+    with state.lock:
+        stale_assignments = [i.assignment for i in state.queue]
+    # K=2 new observations arrive (untracked ids are tolerated)
+    for i in range(2):
+        client.observe(ObserveRequest(exp, f"s-ext{i}", {"x": 0.5 + i / 10},
+                                      float(i)))
+    batch = client.suggest(exp, 4)
+    assert len(batch) == 4
+    served = [s.assignment for s in batch.suggestions]
+    for a in served:
+        assert a not in stale_assignments, \
+            "served a suggestion past its staleness bound"
+    st = client.status(exp)
+    assert st.pump["invalidated"] >= 1
+    # pending accounting balanced: only the served batch is pending
+    assert st.pending == 4
+
+
+def test_invalidation_retires_constant_liar_lies():
+    """Invalidated queue entries must release their GP lies — a leaked lie
+    permanently suppresses EI around a point that will never be observed."""
+    client = LocalClient(tempfile.mkdtemp())
+    cfg = _cfg(budget=100, optimizer="gp", prefetch=3, staleness=1,
+               optimizer_options={"n_init": 2, "fit_steps": 10,
+                                  "warm_fit_steps": 5})
+    exp = _create(client, cfg).exp_id
+    for i in range(3):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    _wait(lambda: client.status(exp).prefetched >= 1)
+    # every queued item is stale after one more observation (K=1)
+    client.observe(ObserveRequest(exp, "s-ext", {"x": 0.77}, 9.0))
+    client.suggest(exp, 2)
+    client.stop(exp)
+    state = client._exps[exp]
+    assert not state.optimizer._pending, \
+        f"leaked lies: {state.optimizer._pending}"
+    assert state.queue == [] and state.pending == {}
+
+
+# ------------------------------------------------------------------- drain
+def test_stop_drains_pump_queue_and_pending():
+    client = LocalClient(tempfile.mkdtemp())
+    cfg = _cfg(budget=60, optimizer="gp", prefetch=4,
+               optimizer_options={"n_init": 2, "fit_steps": 10,
+                                  "warm_fit_steps": 5})
+    exp = _create(client, cfg).exp_id
+    for i in range(3):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    _wait(lambda: client.status(exp).prefetched >= 1)
+    client.suggest(exp, 1)          # leave one pending too
+    client.stop(exp)
+    state = client._exps[exp]
+    assert not (state.pump and state.pump.alive), "pump must be dead"
+    assert state.queue == [] and state.pending == {}
+    assert not state.optimizer._pending, "stop must retire every lie"
+    assert len(client.suggest(exp, 2)) == 0, \
+        "a stopped experiment must never serve (queued or fresh)"
+
+
+def test_budget_completion_winds_pump_down():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=3, prefetch=4)).exp_id
+    batch = client.suggest(exp, 3)
+    for i, s in enumerate(batch.suggestions):
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(i)))
+    st = client.status(exp)         # terminal reconcile point
+    assert st.state == "complete" and st.observations == 3
+    assert st.prefetched == 0, "complete experiments hold no speculation"
+    assert _wait(lambda: not client._exps[exp].pump.alive, 5.0), \
+        "pump must exit once the budget is spent"
+
+
+def test_pump_restarts_across_service_restart_resume():
+    root = tempfile.mkdtemp()
+    c1 = LocalClient(root)
+    cfg = _cfg(budget=40, prefetch=4)
+    exp = _create(c1, cfg).exp_id
+    _fill(c1, exp, 4)
+    for i in range(3):
+        s = c1.suggest(exp, 1).suggestions[0]
+        c1.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                  float(i)))
+    c1.close()
+    assert not c1._exps[exp].pump.alive
+
+    # "restarted" service over the same store
+    c2 = LocalClient(root)
+    resp = _create(c2, cfg, exp_id=exp)
+    assert resp.resumed and resp.observations == 3
+    _fill(c2, exp, 4)
+    st = c2.status(exp)
+    assert st.pump["alive"] and st.prefetched >= 4
+    batch = c2.suggest(exp, 2)
+    assert len(batch) == 2
+    # replay stayed exact: in-memory history == log, no double-fold
+    assert len(c2._exps[exp].optimizer.history) == 3
+    c2.stop(exp)
+
+
+def test_close_then_suggest_restarts_pump():
+    client = LocalClient(tempfile.mkdtemp())
+    exp = _create(client, _cfg(budget=30, prefetch=3)).exp_id
+    _fill(client, exp, 3)
+    client.close()
+    assert not client._exps[exp].pump.alive
+    assert len(client.suggest(exp, 1)) == 1      # restarts the pump
+    assert _wait(lambda: client.status(exp).pump["alive"], 5.0)
+
+
+def test_status_reports_pipeline_fields_over_http():
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        client = HTTPClient(server.url)
+        exp = _create(client, _cfg(budget=20, prefetch=3)).exp_id
+        _fill(client, exp, 3)
+        st = client.status(exp)
+        assert st.prefetched == 3
+        assert st.pump["alive"] and st.pump["depth"] == 3
+    finally:
+        server.shutdown()
+    # server shutdown drains the backend's pumps
+    state = server.backend._exps[exp]
+    assert not state.pump.alive
+
+
+# -------------------------------------------------------------- contention
+@contention
+def test_contended_suggest_gp_8_clients():
+    """8 threads in a suggest/observe loop against one GP experiment:
+    every suggestion unique, budget never oversubscribed, and the pipeline
+    actually absorbs the load (queue hits or coalesced misses)."""
+    client = LocalClient(tempfile.mkdtemp())
+    cfg = _cfg(budget=400, parallel=8, optimizer="gp",
+               optimizer_options={"n_init": 4, "fit_steps": 20,
+                                  "warm_fit_steps": 10})
+    exp = _create(client, cfg).exp_id
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        s = client.suggest(exp, 1).suggestions[0]
+        client.observe(ObserveRequest(exp, s.suggestion_id, s.assignment,
+                                      float(rng.normal())))
+    out, lock = [], threading.Lock()
+
+    def worker(seed):
+        r = np.random.default_rng(seed)
+        got = []
+        for _ in range(6):
+            batch = client.suggest(exp, 1)
+            for s in batch.suggestions:
+                got.append(s.suggestion_id)
+                client.observe(ObserveRequest(
+                    exp, s.suggestion_id, s.assignment, float(r.normal())))
+            time.sleep(0.02)
+        with lock:
+            out.extend(got)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(out) == len(set(out)), "duplicate suggestion ids"
+    assert len(out) == 48
+    st = client.status(exp)
+    assert st.observations + st.pending <= 400
+    assert st.pump["hits"] + st.pump["misses"] >= 48
+    client.stop(exp)
+    assert not client._exps[exp].optimizer._pending
+
+
+@contention
+def test_contended_two_http_workers_share_budget():
+    """Two HTTP worker fleets over one pipelined experiment: global
+    budget exact, no duplicates across processes' request streams."""
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        cfg = _cfg(budget=60, parallel=4, prefetch=8)
+        exp = _create(HTTPClient(server.url), cfg).exp_id
+        seen, lock = [], threading.Lock()
+
+        def fleet():
+            cl = HTTPClient(server.url)
+            while True:
+                batch = cl.suggest(exp, 2)
+                if not batch.suggestions:
+                    if cl.status(exp).observations >= 60:
+                        return
+                    time.sleep(0.005)
+                    continue
+                for s in batch.suggestions:
+                    with lock:
+                        seen.append(s.suggestion_id)
+                    cl.observe(ObserveRequest(exp, s.suggestion_id,
+                                              s.assignment, 0.5))
+
+        threads = [threading.Thread(target=fleet) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120)
+        assert len(seen) == 60 and len(set(seen)) == 60
+        st = HTTPClient(server.url).status(exp)
+        assert st.observations == 60 and st.pending == 0
+    finally:
+        server.shutdown()
