@@ -17,8 +17,10 @@ echo "== tier-2: multi-client contention tests =="
 REPRO_CONTENTION=1 python -m pytest -q -m contention tests/test_pipeline.py
 
 echo "== tier-2: perf gate =="
+# --strict: a quick-sweep row missing from the committed BENCH_suggest.json
+# fails CI (stale baseline after a bench rename/addition)
 bench_out=$(mktemp)
-if ! python scripts/bench_check.py | tee "$bench_out"; then
+if ! python scripts/bench_check.py --strict | tee "$bench_out"; then
     echo
     echo "== bench delta summary (worst rows vs baseline) =="
     grep -E "x[0-9]+\.[0-9]+" "$bench_out" \

@@ -38,6 +38,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Set, Union
 
+from repro.api import pipeline
 from repro.api.client import SuggestionClient
 from repro.api.pipeline import (MissSlot, PrefetchItem, SuggestionPump,
                                 drain_ops, pop_prefetched, retire_queue,
@@ -82,7 +83,8 @@ class _ExperimentState:
         self.pump: Optional[SuggestionPump] = None
         self.staleness = max(1, cfg.staleness)
         self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
-                      "invalidated": 0, "prefilled": 0, "prewarmed": 0}
+                      "invalidated": 0, "prefilled": 0, "prewarmed": 0,
+                      "sparse_prefilled": 0, "sparse_served": 0}
         self.last_mirror = 0.0       # status.json mirror throttle
         self.appends = 0             # observes between log append + account
         self.append_cv = threading.Condition(self.lock)
@@ -481,6 +483,16 @@ class LocalClient(SuggestionClient):
             pump_stats = dict(state.stats,
                               alive=bool(pump is not None and pump.alive),
                               depth=state.pump_depth())
+            # refit-schedule observability (ISSUE 5): the adaptive warm-
+            # step / refit-period schedule and the shared fit executor's
+            # counters ride along in the pump stats (additive fields)
+            schedule = state.optimizer.refit_schedule()
+            if schedule is not None:
+                pump_stats["refit"] = schedule
+            if pump is not None:
+                # None until a fit was actually submitted — a monitoring
+                # read must not spawn the executor's worker pool
+                pump_stats["executor"] = pipeline.executor_snapshot()
             return StatusResponse(
                 exp_id=exp_id, state=st.get("state", "pending"),
                 name=state.cfg.name, budget=state.cfg.budget,

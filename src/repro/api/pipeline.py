@@ -25,7 +25,18 @@ Three cooperating pieces (all operating on one ``_ExperimentState``):
   observations have arrived, the suggestion is *invalidated* — dropped at
   pop time (and proactively by the pump), its constant-liar lie retired —
   so a warm queue can never serve a point the model has since learned to
-  avoid.
+  avoid.  The same bound is what makes *sparse* refills safe: under
+  saturation the pump refills from the optimizer's approximate
+  subset-of-data posterior (``ask(n, speculative=True)``), and any
+  approximation error is confined to queue entries at most K
+  observations old.
+
+* **Shared fit executor** (`FitExecutor`): hyperparameter-fit debt is
+  never paid on a pump thread.  Pumps submit it to one process-wide
+  priority-queue executor (miss-serving experiments first, idle
+  maintenance last) whose workers run the fit compute without holding
+  the experiment's optimizer lock (``Optimizer.fit_job``) — so N live
+  experiments stop burning N cores on Adam loops while requests park.
 
 Locking protocol (shared with ``repro.api.local``): ``state.opt_lock``
 serializes all optimizer access (ask/tell/forget/restore) and must be
@@ -36,8 +47,10 @@ create/resume's "drain then replay the log tail" sequence race-free.
 """
 from __future__ import annotations
 
+import heapq
+import os
 import threading
-from typing import Any, Callable, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 #: Largest ``ask`` the pipeline issues per optimizer-lock hold (pump
 #: refill ticks and coalesced miss rounds alike).  Bounds lock latency
@@ -50,14 +63,212 @@ from typing import Any, Callable, Dict, List
 #: Only a single ``suggest(count > 8)`` call exceeds the chunk.
 ASK_CHUNK = 8
 
+#: FitExecutor priorities (lower = sooner): a fit for an experiment whose
+#: requests are parking on queue misses beats one whose queue merely needs
+#: refilling, which beats idle maintenance debt.
+PRIO_MISS, PRIO_REFILL, PRIO_IDLE = 0, 1, 2
+
+
+class FitExecutor:
+    """Process-wide executor for deferred hyperparameter fits (ISSUE 5).
+
+    Before this existed every per-experiment pump ran its own
+    ``Optimizer.maintain()`` inline: N live experiments meant N threads
+    each burning a core on an Adam loop while suggest requests parked
+    behind the optimizer lock.  Now pumps only recondition and pop —
+    fits are *submitted* here, deduplicated per experiment, and run by a
+    small shared worker pool in priority order (miss-serving experiments
+    first, idle ``maintain()`` debt last).
+
+    Jobs are two-phase (``Optimizer.fit_job``): the expensive compute
+    runs WITHOUT the experiment's optimizer lock (pure JAX over a
+    snapshot), and only the cheap install step takes the lock — so a
+    fit in flight never blocks the request path.
+
+    One instance serves the whole process (``fit_executor()``); workers
+    are daemon threads, so tests and short-lived CLIs need no teardown.
+    ``submit`` coalesces by key (one outstanding job per experiment,
+    escalating to the highest requested priority), which bounds the
+    queue at O(live experiments)."""
+
+    #: idle wait between queue polls (wakes are event-driven via submit)
+    IDLE_WAIT = 0.25
+
+    def __init__(self, workers: Optional[int] = None):
+        if workers is None:
+            # a small shared pool: fits saturate cores (JAX releases the
+            # GIL), so more workers than ~cpu/4 just thrash the caches
+            workers = max(1, min(2, (os.cpu_count() or 2) // 4))
+        self.workers = workers
+        self._cv = threading.Condition()
+        self._heap: List[tuple] = []            # (prio, seq, key)
+        self._jobs: Dict[Any, tuple] = {}       # key -> (prio, fn)
+        self._active: set = set()               # keys running on a worker
+        self._seq = 0
+        self._stopped = False
+        self.stats = {"executed": 0, "coalesced": 0, "requeued": 0}
+        self._threads = [
+            threading.Thread(target=self._run, name=f"fit-exec-{i}",
+                             daemon=True)
+            for i in range(workers)]
+        for t in self._threads:
+            t.start()
+
+    # ------------------------------------------------------------- queue
+    def submit(self, key: Any, fn: Callable[[], bool],
+               prio: int = PRIO_IDLE) -> None:
+        """Queue ``fn`` under ``key``; one job per key is outstanding at
+        a time (re-submits coalesce, keeping the most recent ``fn`` and
+        the most urgent priority).  ``fn`` runs on a worker thread and
+        returns True to be requeued (e.g. it lost an optimizer-lock
+        race)."""
+        with self._cv:
+            if self._stopped:
+                return
+            if key in self._active:
+                # this key's job is mid-run on a worker: don't queue a
+                # second fit for the same experiment (the debt check is
+                # level-triggered — the pump re-submits on a later tick
+                # once the running fit has installed, if still owed)
+                self.stats["coalesced"] += 1
+                return
+            cur = self._jobs.get(key)
+            if cur is not None:
+                self.stats["coalesced"] += 1
+                if prio < cur[0]:       # escalate: push a fresher entry;
+                    self._jobs[key] = (prio, fn)    # the stale one is
+                    self._seq += 1                  # skipped at pop time
+                    heapq.heappush(self._heap, (prio, self._seq, key))
+                    self._cv.notify()
+                else:
+                    self._jobs[key] = (cur[0], fn)
+                return
+            self._jobs[key] = (prio, fn)
+            self._seq += 1
+            heapq.heappush(self._heap, (prio, self._seq, key))
+            self._cv.notify()
+
+    def cancel(self, key: Any) -> bool:
+        """Drop the outstanding job for ``key`` (experiment stopped)."""
+        with self._cv:
+            return self._jobs.pop(key, None) is not None
+
+    def backlog(self) -> int:
+        with self._cv:
+            return len(self._jobs)
+
+    @property
+    def alive(self) -> bool:
+        return not self._stopped and any(t.is_alive() for t in self._threads)
+
+    def stop(self, join: bool = True) -> None:
+        """Tear down (tests only — the process-wide singleton normally
+        lives as long as the process; its threads are daemons)."""
+        with self._cv:
+            self._stopped = True
+            self._jobs.clear()
+            self._heap.clear()
+            self._cv.notify_all()
+        if join:
+            for t in self._threads:
+                if t is not threading.current_thread():
+                    t.join(timeout=5.0)
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._cv:
+            return dict(self.stats, backlog=len(self._jobs),
+                        workers=self.workers)
+
+    # ----------------------------------------------------------- workers
+    def _pop(self):
+        """Highest-priority live job, or None after an idle wait.  Heap
+        entries whose key was cancelled/coalesced away (priority no
+        longer matching) are lazily skipped."""
+        with self._cv:
+            while not self._stopped:
+                while self._heap:
+                    prio, _, key = heapq.heappop(self._heap)
+                    cur = self._jobs.get(key)
+                    if cur is not None and cur[0] == prio:
+                        del self._jobs[key]
+                        self._active.add(key)
+                        return key, cur[1], prio
+                self._cv.wait(self.IDLE_WAIT)
+                if not self._heap:
+                    return None
+            return None
+
+    def _run(self) -> None:
+        while True:
+            item = self._pop()
+            if item is None:
+                if self._stopped:
+                    return
+                continue
+            key, fn, prio = item
+            err = None
+            try:
+                again = bool(fn())
+            except Exception as e:  # noqa: executor must survive any job
+                again = False
+                err = f"{type(e).__name__}: {e}"
+            with self._cv:
+                self._active.discard(key)   # before any re-submit
+                self.stats["executed"] += 1
+                if again:
+                    self.stats["requeued"] += 1
+                if err is not None:
+                    # surfaced via snapshot()/StatusResponse — a
+                    # persistently failing fit must not die silently
+                    # (the pump keeps re-submitting while debt is owed)
+                    self.stats["failed"] = self.stats.get("failed", 0) + 1
+                    self.stats["last_error"] = err
+            if again:
+                self.submit(key, fn, prio)
+
+
+_EXECUTOR: Optional[FitExecutor] = None
+_EXECUTOR_LOCK = threading.Lock()
+
+
+def fit_executor() -> FitExecutor:
+    """The process-wide fit executor (created on first use; replaced if a
+    test stopped the previous one)."""
+    global _EXECUTOR
+    with _EXECUTOR_LOCK:
+        if _EXECUTOR is None or not _EXECUTOR.alive:
+            _EXECUTOR = FitExecutor()
+        return _EXECUTOR
+
+
+def cancel_fit(key: Any) -> None:
+    """Cancel a queued fit without instantiating the executor (pump
+    teardown on processes that never submitted a fit)."""
+    ex = _EXECUTOR
+    if ex is not None and ex.alive:
+        ex.cancel(key)
+
+
+def executor_snapshot() -> Optional[Dict[str, Any]]:
+    """The live executor's counters, or None — status/monitoring reads
+    must not spawn the worker pool as a side effect."""
+    ex = _EXECUTOR
+    if ex is not None and ex.alive:
+        return ex.snapshot()
+    return None
+
 
 class PrefetchItem:
-    """One speculative suggestion waiting in the pump queue."""
-    __slots__ = ("assignment", "born_obs")
+    """One speculative suggestion waiting in the pump queue.  ``sparse``
+    marks entries minted from the sparse subset-of-data posterior (queue
+    refills under saturation) rather than the exact one."""
+    __slots__ = ("assignment", "born_obs", "sparse")
 
-    def __init__(self, assignment: Dict[str, Any], born_obs: int):
+    def __init__(self, assignment: Dict[str, Any], born_obs: int,
+                 sparse: bool = False):
         self.assignment = assignment
         self.born_obs = born_obs
+        self.sparse = sparse
 
 
 class MissSlot:
@@ -103,6 +314,7 @@ def pop_prefetched(state, want: int):
     returned for lie retirement — they are never served."""
     fresh: List[Dict[str, Any]] = []
     stale: List[Dict[str, Any]] = []
+    sparse_served = 0
     while state.queue and len(fresh) < want:
         # LIFO: always serve the *freshest* speculation — it was computed
         # against the most observations.  Older entries age toward the
@@ -112,10 +324,16 @@ def pop_prefetched(state, want: int):
             stale.append(item.assignment)
         else:
             fresh.append(item.assignment)
+            sparse_served += bool(item.sparse)
     if stale:
         state.stats["invalidated"] += len(stale)
     if fresh:
         state.stats["hits"] += len(fresh)
+    if sparse_served:
+        # how much of the served traffic rode the approximate posterior —
+        # the signal for tuning SPARSE_MAX (ROADMAP: sparse quality)
+        state.stats["sparse_served"] = (
+            state.stats.get("sparse_served", 0) + sparse_served)
     return fresh, stale
 
 
@@ -210,8 +428,18 @@ class SuggestionPump:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._prewarm_goal = 0
+        # miss counter at the last tick — the saturation signal.  Seeded
+        # from the state so a restarted pump (close/resume reuses the
+        # _ExperimentState) doesn't read pre-restart misses as live
+        # saturation and serve sparse refills on an idle service.
+        self._seen_misses = state.stats.get("misses", 0)
         self._thread = threading.Thread(
             target=self._run, name=f"suggest-pump-{exp_id}", daemon=True)
+
+    @property
+    def fit_key(self) -> tuple:
+        """This experiment's coalescing key on the shared FitExecutor."""
+        return ("fit", id(self.state))
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "SuggestionPump":
@@ -224,6 +452,7 @@ class SuggestionPump:
     def stop(self, join: bool = True, timeout: float = 10.0) -> None:
         self._stop.set()
         self._wake.set()
+        cancel_fit(self.fit_key)
         if join and self._thread.is_alive() \
                 and self._thread is not threading.current_thread():
             self._thread.join(timeout)
@@ -278,7 +507,9 @@ class SuggestionPump:
 
     def _tick(self) -> bool:
         """One unit of pump work; returns True when anything was done (the
-        loop re-ticks immediately) and False to idle-wait."""
+        loop re-ticks immediately) and False to idle-wait.  Hyperfits are
+        NOT run here: debt is submitted to the shared ``FitExecutor`` so
+        the pump thread only reconditions and pops."""
         state = self.state
         self._prewarm()     # cheap no-op once the goal bucket is compiled
         if not state.opt_lock.acquire(timeout=0.1):
@@ -310,21 +541,30 @@ class SuggestionPump:
                     # scan shapes; the loop re-ticks until at depth
                     want = min(self.depth - len(state.queue),
                                max(0, headroom), ASK_CHUNK)
+                # saturation signal: requests outran the warm queue since
+                # the last tick (served misses, or slots parked right now)
+                misses_now = state.stats["misses"]
+                saturated = (misses_now > self._seen_misses
+                             or bool(state.miss_slots))
+                self._seen_misses = misses_now
             for a in stale:
                 state.optimizer.forget(a)
             swept = bool(stale) or retired > 0
+            self._push_fit_debt(saturated, want)
             if want <= 0:
-                # queue is at depth: the quiet moment to pay the owed
-                # hyperparameter refit, off the request path
-                with state.lock:
-                    quiet = not state.miss_slots
-                if quiet and state.optimizer.maintain():
-                    with state.lock:
-                        state.stats["maintained"] = (
-                            state.stats.get("maintained", 0) + 1)
-                    return True
                 return busy or swept
-            assigns = state.optimizer.ask(want)
+            # under saturation a speculative_ask optimizer refills from
+            # its sparse posterior — bounded cost regardless of history
+            # size, so the queue keeps pace past refit-bound throughput;
+            # misses and synchronous asks still use the exact path.
+            # sparse_eligible() confirms the sparse path would really
+            # engage (enough history, fitted model), so the sparse_*
+            # counters never mislabel exact suggestions
+            spec = (saturated
+                    and getattr(state.optimizer, "speculative_ask", False)
+                    and state.optimizer.sparse_eligible())
+            assigns = (state.optimizer.ask(want, speculative=True)
+                       if spec else state.optimizer.ask(want))
             with state.lock:
                 if state.stopped or state.observed >= state.cfg.budget:
                     take = []
@@ -333,11 +573,53 @@ class SuggestionPump:
                                 - len(state.pending) - len(state.queue))
                     take = assigns[:max(0, headroom)]
                 state.queue.extend(
-                    PrefetchItem(a, state.observed) for a in take)
+                    PrefetchItem(a, state.observed, sparse=spec)
+                    for a in take)
                 state.stats["prefilled"] += len(take)
+                if spec:
+                    state.stats["sparse_prefilled"] = (
+                        state.stats.get("sparse_prefilled", 0) + len(take))
                 extra = assigns[len(take):]
             for a in extra:
                 state.optimizer.forget(a)
             return True
         finally:
             state.opt_lock.release()
+
+    def _push_fit_debt(self, saturated: bool, want: int) -> None:
+        """Submit owed hyperfit work to the shared executor, prioritized
+        by how starved this experiment is.  Called with ``opt_lock``
+        held (``maintenance_due`` reads optimizer state)."""
+        if not self.state.optimizer.maintenance_due():
+            return
+        prio = (PRIO_MISS if saturated
+                else PRIO_REFILL if want > 0 else PRIO_IDLE)
+        fit_executor().submit(self.fit_key, self._maintain_job, prio)
+
+    def _maintain_job(self) -> bool:
+        """One deferred hyperfit, run on the shared FitExecutor.  Phase
+        1 snapshots the fit under ``opt_lock`` (cheap), phase 2 runs the
+        Adam loop with NO lock held, phase 3 installs the result under
+        ``opt_lock`` (cheap) — requests never wait behind the fit
+        itself.  Returns True to be requeued after losing the lock
+        race."""
+        state = self.state
+        if self._stop.is_set():
+            return False
+        if not state.opt_lock.acquire(timeout=0.05):
+            return not self._stop.is_set()
+        try:
+            drain_ops(state)            # the fit should see every fold
+            job = state.optimizer.fit_job()
+        finally:
+            state.opt_lock.release()
+        if job is None:
+            return False
+        install = job()                 # the expensive part — lock-free
+        with state.opt_lock:
+            if not self._stop.is_set():
+                install()
+                with state.lock:
+                    state.stats["maintained"] = (
+                        state.stats.get("maintained", 0) + 1)
+        return False

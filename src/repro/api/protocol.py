@@ -316,8 +316,11 @@ class StatusResponse:
     v1 fields, API.md §Suggestion pipeline): ``prefetched`` is the number
     of pre-computed suggestions currently warm in the prefetch queue, and
     ``pump`` carries the pump's counters (hits, misses, coalesced,
-    invalidated, prefilled, prewarmed, alive, depth) or ``None`` for a
-    non-live experiment."""
+    invalidated, prefilled, sparse_prefilled, prewarmed, alive, depth —
+    plus, for live experiments, the optimizer's ``refit`` schedule and
+    the shared fit executor's ``executor`` counters, API.md §Posterior
+    approximation & refit scheduling) or ``None`` for a non-live
+    experiment."""
     exp_id: str
     state: str = "pending"
     name: str = ""

@@ -42,6 +42,19 @@ class Optimizer(abc.ABC):
     #: True when ``ask`` costs enough (model fit / compile) that the
     #: suggestion service should run its prefetch pump for this optimizer.
     expensive_ask: bool = False
+    #: True when ``ask`` accepts ``speculative=True`` — a cheaper,
+    #: approximate proposal path (e.g. the GP's sparse subset-of-data
+    #: posterior) the service may use to refill its prefetch queue when
+    #: the exact path is saturated.  Synchronous asks and coalesced
+    #: misses always use the exact path.
+    speculative_ask: bool = False
+
+    def sparse_eligible(self) -> bool:
+        """True when ``ask(n, speculative=True)`` would actually use the
+        approximate path *right now* (enough history, fitted model, …).
+        The service checks this before labeling refills as sparse, so
+        its sparse-traffic counters never count exact suggestions."""
+        return False
 
     def __init__(self, space: Space, seed: int = 0):
         self.space = space
@@ -80,6 +93,36 @@ class Optimizer(abc.ABC):
         pump when no request is waiting on the optimizer.  Returns True
         when work was done (callers may loop)."""
         return False
+
+    def maintenance_due(self) -> bool:
+        """True when deferred maintenance is owed — the cheap check the
+        suggestion service makes before queueing a ``maintain`` job on
+        the shared fit executor (see ``repro.api.pipeline.FitExecutor``).
+        Must not touch model state."""
+        return False
+
+    def fit_job(self):
+        """Snapshot the owed maintenance as a two-phase job for the
+        shared fit executor: ``fit_job()`` is called under the service's
+        optimizer lock and returns None (nothing owed) or a ``run``
+        callable; ``run()`` executes WITHOUT the lock (pure compute over
+        copied state) and returns an ``install`` callable the executor
+        applies under the lock.  The default wraps ``maintain`` so
+        optimizers without a lock-free split still work — their compute
+        just runs inside the install phase."""
+        if not self.maintenance_due():
+            return None
+
+        def run():
+            return lambda: self.maintain()
+        return run
+
+    def refit_schedule(self) -> Optional[Dict[str, Any]]:
+        """Optional readout of the optimizer's live refit schedule
+        (adaptive step budgets, fit/arrival latencies, deferred-fit
+        debt).  Surfaced by the service in ``StatusResponse`` pump
+        stats; None when the optimizer has nothing to report."""
+        return None
 
     # ------------------------------------------------------------ helpers
     @property

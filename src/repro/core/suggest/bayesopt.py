@@ -15,11 +15,24 @@ constant-liar updates, O(n²) per lie instead of a full refit per point).
 Pending lies are keyed by a ``__lie`` token carried in the assignment, so
 near-identical suggestions (speculative twins, densified local candidates)
 always retire the *right* lie.
+
+Refit scheduling (ISSUE 5): ``warm_fit_steps``/``refit_every`` are *base*
+values of an adaptive schedule rather than fixed constants.  Past
+``ADAPT_N`` observations the warm-fit step budget shrinks (the warm start
+is near-converged; each Adam step is O(n³)) and the refit period grows
+with the history and — in service-pipeline mode — with the measured
+fit-latency : observation-arrival ratio, so hyperfits can never consume
+more than ~``FIT_DUTY`` of the optimizer's wall-time.  The live schedule
+is observable via ``refit_schedule()`` (surfaced in ``StatusResponse``
+pump stats).  ``ask(n, speculative=True)`` additionally lets the service
+refill its prefetch queue from the sparse subset-of-data posterior
+(``gp.sparse_posterior``) when the exact path is saturated.
 """
 from __future__ import annotations
 
+import time
 import uuid
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -29,21 +42,38 @@ from repro.core.suggest.base import Observation, Optimizer, register
 
 LIE_KEY = "__lie"
 
+#: History size below which the base ``warm_fit_steps``/``refit_every``
+#: apply verbatim (small histories: cheap, frequent fits; the adaptive
+#: schedule only kicks in past this).  Matches ``gp.SPARSE_MAX`` — the
+#: same threshold past which the sparse speculative posterior differs
+#: from the exact one.
+ADAPT_N = gp.SPARSE_MAX
+#: Floor for the adaptive warm-fit step budget.
+MIN_WARM_STEPS = 8
+#: Ceiling for the adaptive refit period (observations between hyperfits).
+MAX_REFIT_EVERY = 64
+#: Largest fraction of wall-time (measured as fit-latency over observation
+#: inter-arrival time) the deferred hyperfits may consume in pipeline mode.
+FIT_DUTY = 0.25
+
 
 @register("gp")
 @register("bayesopt")
 class BayesOpt(Optimizer):
     expensive_ask = True        # service runs the prefetch pump for us
+    speculative_ask = True      # honors ask(n, speculative=True)
 
     def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
                  candidates: int = 1024, fit_steps: int = 150,
-                 warm_fit_steps: int = 40, refit_every: int = 4):
+                 warm_fit_steps: int = 40, refit_every: int = 4,
+                 adaptive: bool = True):
         super().__init__(space, seed)
         self.n_init = n_init
         self.n_candidates = candidates
         self.fit_steps = fit_steps
         self.warm_fit_steps = warm_fit_steps
         self.refit_every = refit_every
+        self.adaptive = adaptive
         self._post = None
         self._params = None                    # warm-start hyperparameters
         self._since_fit = 0
@@ -65,6 +95,66 @@ class BayesOpt(Optimizer):
         # later in maintain() on the pump thread.  Default False: the
         # raw ask/tell contract (one warm fit per ask batch) is unchanged.
         self.defer_fits = False
+        # --- adaptive refit schedule + sparse speculation (ISSUE 5) ---
+        self._fit_ema = None            # EMA of hyperfit wall seconds
+        self._arrival_ema = None        # EMA of observation inter-arrival s
+        self._last_obs_t = None
+        self._fits = 0                  # hyperfits run (cold + warm)
+        self._sparse_post = None        # cached subset-of-data posterior
+        self._sparse_rows = 0           # rows folded into _sparse_post
+        self._sparse_m = 0              # subset size of the cached sparse
+        self._sparse_asks = 0           # speculative points served sparse
+
+    # ------------------------------------------------- refit schedule
+    def warm_steps(self) -> int:
+        """Adaptive warm-fit step budget: the base ``warm_fit_steps`` up
+        to ``ADAPT_N`` observations, then shrinking ~1/n (each Adam step
+        costs O(n³) and the warm start is near-converged), floored at
+        ``MIN_WARM_STEPS``."""
+        return self._warm_steps_at(len(self._ys))
+
+    def _warm_steps_at(self, n: int) -> int:
+        """The schedule as a pure function of history size (``prewarm``
+        evaluates it at future sizes).  A halving ladder, not a smooth
+        1/n: ``_fit`` is jitted with a static step count, so the schedule
+        must only ever take a few discrete values (all prewarmed) or it
+        would recompile per history size."""
+        s = self.warm_fit_steps
+        if not self.adaptive:
+            return s
+        h = ADAPT_N
+        while n > h and s // 2 >= MIN_WARM_STEPS:
+            s //= 2
+            h *= 2
+        return s
+
+    def refit_period(self) -> int:
+        """Adaptive refit period: the base ``refit_every`` up to
+        ``ADAPT_N`` observations, then growing with the history
+        (hyperparameters move slowly once the posterior is data-rich) and
+        — in ``defer_fits`` pipeline mode — with the measured
+        fit-latency : arrival-rate ratio so deferred hyperfits stay under
+        a ``FIT_DUTY`` share of wall-time under sustained load."""
+        n = len(self._ys)
+        if not self.adaptive or n <= ADAPT_N:
+            return self.refit_every
+        period = max(self.refit_every, n // 16)
+        if (self.defer_fits and self._fit_ema is not None
+                and self._arrival_ema is not None and self._arrival_ema > 0):
+            period = max(period, int(np.ceil(
+                self._fit_ema / (self._arrival_ema * FIT_DUTY))))
+        return min(period, MAX_REFIT_EVERY)
+
+    def refit_schedule(self) -> Dict[str, object]:
+        """Live schedule readout (StatusResponse pump stats)."""
+        ms = (lambda s: None if s is None else round(s * 1e3, 3))
+        return {"n": len(self._ys), "warm_steps": self.warm_steps(),
+                "refit_every": self.refit_period(),
+                "since_fit": self._since_fit, "fits": self._fits,
+                "fit_ms": ms(self._fit_ema),
+                "arrival_ms": ms(self._arrival_ema),
+                "sparse_asks": self._sparse_asks,
+                "sparse_m": self._sparse_m}
 
     # ------------------------------------------------------------------
     def prewarm(self, max_history: int, batch: int = 8) -> int:
@@ -85,9 +175,13 @@ class BayesOpt(Optimizer):
         b = gp.MIN_BUCKET
         while b <= target:
             if b > self._prewarmed:
+                # only the warm-step ladder values reachable while the
+                # history lives in this bucket (plus the cold fit) — not
+                # the whole ladder per bucket
                 gp.prewarm_bucket(len(self.space), b,
                                   fit_steps=(self.fit_steps,
-                                             self.warm_fit_steps),
+                                             self._warm_steps_at(b // 2),
+                                             self._warm_steps_at(b)),
                                   k_pads=k_pads, n_cand=m)
                 warmed += 1
             b *= 2
@@ -115,14 +209,20 @@ class BayesOpt(Optimizer):
         x = np.asarray(self._xs)
         y = np.asarray(self._ys)
         bucket = gp.bucket_size(len(x) + len(self._pending) + extra)
-        steps = (self.warm_fit_steps if self._params is not None
+        steps = (self.warm_steps() if self._params is not None
                  else self.fit_steps)
+        t0 = time.perf_counter()
         post = gp.fit_gp(x, y, steps=steps, params0=self._params,
                          bucket=bucket)
+        dt = time.perf_counter() - t0
+        self._fit_ema = dt if self._fit_ema is None \
+            else 0.7 * self._fit_ema + 0.3 * dt
+        self._fits += 1
         self._params = post.params
         for u in self._pending.values():
             post = gp.append_lie(post, np.asarray(u, np.float32))
         self._post = post
+        self._sparse_post = None        # new hyperparameters
         self._n_in_post = len(x) + len(self._pending)
         self._needs_fit = False
         self._needs_recondition = False
@@ -146,20 +246,69 @@ class BayesOpt(Optimizer):
         self._n_in_post = len(x) + len(self._pending)
         self._needs_recondition = False
 
+    def maintenance_due(self) -> bool:
+        """True when a deferred hyperparameter refit is owed — what the
+        service pump checks before queueing a job on the shared fit
+        executor."""
+        return self._needs_fit and len(self._ys) >= max(2, len(self.space))
+
     def maintain(self) -> bool:
         """Run the owed hyperparameter refit, if any (``defer_fits``
-        mode).  The service pump calls this off the request path."""
-        if self._needs_fit and len(self._ys) >= max(2, len(self.space)):
+        mode), inline and under the caller's lock.  The service's shared
+        fit executor prefers ``fit_job`` (lock-free compute)."""
+        if self.maintenance_due():
             self._refit()
             return True
         return False
 
-    def ask(self, n: int = 1) -> List[Assignment]:
+    def fit_job(self):
+        """Snapshot the owed hyperparameter fit as a lock-free closure
+        (ISSUE 5): the caller invokes the returned ``run()`` WITHOUT
+        holding the optimizer lock — it is pure JAX compute over copied
+        arrays — and then applies the ``install()`` it returns under the
+        lock.  ``install`` only adopts the new hyperparameters and marks
+        a recondition; the next ``ask`` folds them together with any
+        observations that arrived mid-fit, so a request never waits
+        behind an Adam loop."""
+        if not self.maintenance_due():
+            return None
+        x = np.asarray(self._xs)
+        y = np.asarray(self._ys)
+        params0 = self._params
+        steps = self.warm_steps() if params0 is not None else self.fit_steps
+        bucket = gp.bucket_size(len(x))
+        n_snap = len(y)
+
+        def run():
+            t0 = time.perf_counter()
+            post = gp.fit_gp(x, y, steps=steps, params0=params0,
+                             bucket=bucket)
+            dt = time.perf_counter() - t0
+
+            def install():
+                self._fit_ema = dt if self._fit_ema is None \
+                    else 0.7 * self._fit_ema + 0.3 * dt
+                self._fits += 1
+                self._params = post.params
+                self._sparse_post = None
+                # observations that landed mid-fit stay counted as debt —
+                # and if they already exceed the period (a burst arrived
+                # during the fit), the next fit is owed immediately, else
+                # the MAX_REFIT_EVERY staleness bound would silently slip
+                self._since_fit = max(0, len(self._ys) - n_snap)
+                self._needs_fit = self._since_fit >= self.refit_period()
+                self._needs_recondition = True
+            return install
+        return run
+
+    def ask(self, n: int = 1, speculative: bool = False) -> List[Assignment]:
         n = int(n)
         if n <= 0:
             return []
         if len(self._ys) < max(self.n_init, 2, len(self.space)):
             return self._ask_random(n)
+        if speculative and self.sparse_eligible():
+            return self._ask_sparse(n)
         if self._post is None or (self._needs_fit
                                   and not (self.defer_fits
                                            and self._params is not None)):
@@ -176,6 +325,62 @@ class BayesOpt(Optimizer):
         picks, post = gp.select_batch(self._post, cand, best_y, n)
         self._post = post
         self._n_in_post += n
+        # the new exact-path lies are not in the cached sparse posterior:
+        # a later speculative refill must rebuild it or it could re-pick
+        # these very points
+        self._sparse_post = None
+        out = []
+        for j in np.asarray(picks):
+            u = np.asarray(cand[int(j)], float)
+            a = self.space.from_unit(u)
+            a[LIE_KEY] = self._new_lie(u)
+            out.append(a)
+        return out
+
+    # ------------------------------------------- sparse speculative ask
+    def sparse_eligible(self) -> bool:
+        """Whether ``ask(n, speculative=True)`` would actually take the
+        sparse path right now — the service checks this so its
+        ``sparse_prefilled``/``sparse_served`` counters only ever count
+        genuinely sparse suggestions.  The sparse path only exists to
+        break refit-bound saturation: it needs already-fit
+        hyperparameters, a history large enough that the subset actually
+        differs in cost (past ``gp.SPARSE_MAX`` the exact Cholesky
+        outgrows the sparse one), and pipeline mode (the exact posterior
+        still serves synchronous asks and misses)."""
+        return (self.defer_fits and self._params is not None
+                and len(self._ys) > gp.SPARSE_MAX)
+
+    def _sparse_recondition(self, extra: int) -> None:
+        """(Re)build the cached subset-of-data posterior at the current
+        hyperparameters and fold the pending lies in — O(m³) with
+        m <= ``gp.SPARSE_MAX``, independent of history size."""
+        post, idx = gp.sparse_posterior(self._params, np.asarray(self._xs),
+                                        np.asarray(self._ys),
+                                        extra=len(self._pending) + extra)
+        for u in self._pending.values():
+            post = gp.append_lie(post, np.asarray(u, np.float32))
+        self._sparse_post = post
+        self._sparse_m = len(idx)
+        self._sparse_rows = len(idx) + len(self._pending)
+
+    def _ask_sparse(self, n: int) -> List[Assignment]:
+        """Select a speculative batch from the sparse posterior (one
+        bounded Cholesky + the same jitted q-EI scan), leaving the exact
+        posterior untouched.  Lies are registered exactly like exact-path
+        lies, so retirement/recondition see no difference."""
+        if (self._sparse_post is None
+                or self._sparse_post.capacity - self._sparse_rows < n):
+            self._sparse_recondition(extra=n)
+        cand = self._candidates()
+        best_y = np.float32(max(self._ys))
+        picks, post = gp.select_batch(self._sparse_post, cand, best_y, n)
+        self._sparse_post = post
+        self._sparse_rows += n
+        self._sparse_asks += n
+        # the new lies live only in the sparse posterior: the next exact
+        # ask must fold the full pending set back in before selecting
+        self._needs_recondition = True
         out = []
         for j in np.asarray(picks):
             u = np.asarray(cand[int(j)], float)
@@ -189,6 +394,7 @@ class BayesOpt(Optimizer):
         for a in self.space.sample(self.rng, n):
             a[LIE_KEY] = self._new_lie(self.space.to_unit(_clean(a)))
             out.append(a)
+        self._sparse_post = None    # lies the sparse cache hasn't seen
         return out
 
     def _candidates(self) -> np.ndarray:
@@ -221,11 +427,22 @@ class BayesOpt(Optimizer):
     def forget(self, assignment: Assignment) -> None:
         """Retire the lie of a suggestion that will never be observed
         (released / stopped), so it stops suppressing EI at that point."""
-        if self._retire_lie(Observation(assignment, None)) \
-                and self._post is not None:
-            self._needs_recondition = True
+        if self._retire_lie(Observation(assignment, None)):
+            self._sparse_post = None
+            if self._post is not None:
+                self._needs_recondition = True
 
     def _update(self, observations: Sequence[Observation]) -> None:
+        if observations:
+            # arrival-rate EMA for the latency-aware refit period; batch
+            # replays (restore) collapse to one arrival sample
+            now = time.monotonic()
+            if self._last_obs_t is not None:
+                dt = max(now - self._last_obs_t, 1e-6) / len(observations)
+                self._arrival_ema = dt if self._arrival_ema is None \
+                    else 0.7 * self._arrival_ema + 0.3 * dt
+            self._last_obs_t = now
+            self._sparse_post = None    # data changed
         for o in observations:
             retired = self._retire_lie(o)
             if retired and self._post is not None:
@@ -252,5 +469,5 @@ class BayesOpt(Optimizer):
                 elif not retired:
                     self._needs_recondition = True
         self._since_fit += len(observations)
-        if self._since_fit >= self.refit_every:
+        if self._since_fit >= self.refit_period():
             self._needs_fit = True

@@ -21,6 +21,17 @@ Hot-path design (the suggestion service calls this once per `ask` batch):
   per-point Python/dispatch overhead vanishes.
 * **Warm starts** — ``fit_gp(..., params0=...)`` resumes Adam from the
   previous optimum so converged posteriors need far fewer steps.
+* **Sparse speculative posterior** — ``sparse_posterior`` builds an exact
+  GP over a subset-of-data design of at most ``SPARSE_MAX`` inducing
+  points (incumbent + recency window + even coverage of the older
+  history), so conditioning cost is O(m³) regardless of history size.
+  The suggestion service uses it *only* to refill the speculative
+  prefetch queue when the exact path is saturated (ISSUE 5) — exact
+  posteriors still serve synchronous asks and coalesced misses, and
+  queue entries are staleness-bounded, which contains the approximation
+  error.  It returns an ordinary ``GPPosterior`` in an ordinary
+  power-of-two bucket, so every jitted kernel (EI, rank-1 appends, the
+  q-EI scan) and the ``prewarm_bucket`` compile cache apply unchanged.
 """
 from __future__ import annotations
 
@@ -32,6 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 MIN_BUCKET = 16
+
+#: Cap on the subset-of-data design of the sparse speculative posterior.
+#: 64 keeps the sparse Cholesky inside the two smallest non-trivial shape
+#: buckets (64/128 once lies and picks are folded in), which ``prewarm``
+#: always compiles first — a sparse refill never waits on XLA.
+SPARSE_MAX = 64
 
 
 def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
@@ -212,6 +229,49 @@ def make_posterior(params: GPParams, x: np.ndarray, y: np.ndarray,
     return _posterior(jax.tree.map(lambda a: jnp.asarray(a, dtype), params),
                       xp, ynp, mask, jnp.asarray(mean, dtype),
                       jnp.asarray(std, dtype))
+
+
+# ------------------------------------------------------- sparse posterior
+def sparse_subset(n: int, best_idx: int, m: int = SPARSE_MAX) -> np.ndarray:
+    """Indices of the subset-of-data design over an ``n``-point history:
+    the incumbent (``best_idx``), the most recent ``m // 2`` points (the
+    region speculation is actively exploring — and the rows the staleness
+    bound judges freshness against), and an even stride over the older
+    remainder for global coverage.  Deterministic in (n, best_idx, m) so
+    repeated reconditions reuse the same design and tests can assert on
+    it.  Returns sorted unique indices, ``len <= m``."""
+    n = int(n)
+    m = max(1, int(m))
+    if n <= m:
+        return np.arange(n)
+    recent = np.arange(n - m // 2, n)
+    rest = m - len(recent) - 1                    # slots for old coverage
+    old = np.linspace(0, n - m // 2 - 1, num=max(rest, 0)).astype(int) \
+        if rest > 0 else np.empty(0, int)
+    return np.unique(np.concatenate([[int(best_idx)], old, recent]))
+
+
+def sparse_posterior(params: GPParams, x: np.ndarray, y: np.ndarray,
+                     m: int = SPARSE_MAX, extra: int = 0
+                     ) -> Tuple[GPPosterior, np.ndarray]:
+    """Sparse speculative posterior: an *exact* GP conditioned on the
+    ``sparse_subset`` design only, at the given (already-fit)
+    hyperparameters — conditioning is one O(m³) Cholesky independent of
+    history size.  ``extra`` reserves padded slots for constant-liar
+    folds on top of the subset (the bucket is sized to absorb them), so
+    ``append_lie``/``select_batch`` work on the result unchanged.
+    Normalization uses the *full* history's mean/std: predicted means and
+    the EI ``best`` threshold stay in the same raw units as the exact
+    posterior.  Returns (posterior, subset indices)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    idx = sparse_subset(len(x), int(np.argmax(y)), m)
+    bucket = bucket_size(len(idx) + max(0, int(extra)))
+    mean = float(np.mean(y))
+    std = max(float(np.std(y)), 1e-6)
+    post = make_posterior(params, x[idx], y[idx], y_mean=mean, y_std=std,
+                          bucket=bucket)
+    return post, idx
 
 
 # ---------------------------------------------------------------- prewarm
