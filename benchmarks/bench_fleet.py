@@ -1,0 +1,82 @@
+"""Fleet SLO: multi-tenant suggest latency through the router.
+
+k experiments sharded across an HTTP fleet, c concurrent clients each
+hammering every experiment round-robin — the paper's "many users, one
+service" deployment.  The committed row is the p50 of per-call suggest
+latency (an SLO row: a contended median, not a best case); p90 rides
+along in the stats spread.  Everything crosses real HTTP twice (client →
+shard) with the manager off the hot path, so a routing regression — map
+lookups under the client lock, per-call map refreshes, admission checks
+leaking into suggest — shows up here and nowhere else.
+"""
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.api.protocol import CreateExperiment, ObserveRequest
+from repro.core import ExperimentConfig, Param, Space
+from repro.fleet import FleetClient, serve_fleet
+
+
+def _cfg_json(name, budget):
+    cfg = ExperimentConfig(name=name, budget=budget, optimizer="random",
+                           space=Space([Param("x", "double", 0, 1)]))
+    return dict(cfg.to_json())
+
+
+def run(k=8, clients=4, calls=25, shards=2, period=5.0):
+    """Returns [(row_suffix, [us, ...])] — one sample per suggest call
+    across all clients.  ``calls`` is per client per experiment; budget is
+    sized so headroom never throttles the bench."""
+    root = tempfile.mkdtemp()
+    srv = serve_fleet(root, shards=shards, period=period).start()
+    samples = []
+    lock = threading.Lock()
+    try:
+        boss = FleetClient(srv.url, heartbeat=False)
+        budget = 2 * clients * calls + 8
+        exp_ids = [boss.create_experiment(CreateExperiment(
+            config=_cfg_json(f"slo-{i}", budget),
+            exp_id=f"exp-slo-{i:02d}")).exp_id for i in range(k)]
+
+        def client_loop(ci):
+            cl = FleetClient(srv.url, worker_id=f"bench-{ci}",
+                             heartbeat=False)
+            mine = []
+            for _ in range(calls):
+                for eid in exp_ids:
+                    t0 = time.perf_counter()
+                    batch = cl.suggest(eid, 1)
+                    mine.append((time.perf_counter() - t0) * 1e6)
+                    for s in batch.suggestions:
+                        cl.observe(ObserveRequest(eid, s.suggestion_id,
+                                                  s.assignment, value=0.5))
+            cl.close()
+            with lock:
+                samples.extend(mine)
+
+        threads = [threading.Thread(target=client_loop, args=(ci,))
+                   for ci in range(clients)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        boss.close()
+    finally:
+        srv.shutdown()
+    return [(f"suggest/k{k}c{clients}", samples)]
+
+
+def main():
+    print("# fleet suggest-latency SLO (k experiments x c clients, "
+          "HTTP router)")
+    print("row,p50_us,p90_us,n")
+    for suffix, us in run():
+        print(f"bench_fleet/{suffix},{np.percentile(us, 50):.0f},"
+              f"{np.percentile(us, 90):.0f},{len(us)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,10 @@ def collect(quick: bool = False) -> dict:
             parallels=(8,) if quick else (1, 8, 32),
             budget=20 if quick else 40):
         rows[f"bench_scheduler/throughput/p{p}"] = round(us, 1)
+    from benchmarks import bench_fleet
+    for suffix, us in bench_fleet.run(calls=8 if quick else 25):
+        # an SLO row: the gate is the contended median, not a best case
+        _reduce(rows, stats, f"bench_fleet/{suffix}", us, gate="p50")
     return {"rows": rows, "stats": stats}
 
 
@@ -127,11 +131,12 @@ def main(argv=None) -> None:
               file=sys.stderr)
         return
 
-    from benchmarks import (bench_optimizers, bench_parallel,
+    from benchmarks import (bench_fleet, bench_optimizers, bench_parallel,
                             bench_population, bench_roofline,
                             bench_scheduler, bench_suggest_latency)
     for mod in (bench_parallel, bench_optimizers, bench_suggest_latency,
-                bench_scheduler, bench_population, bench_roofline):
+                bench_scheduler, bench_fleet, bench_population,
+                bench_roofline):
         print(f"\n===== {mod.__name__} =====")
         try:
             mod.main()

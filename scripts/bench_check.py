@@ -33,7 +33,7 @@ import sys
 import time
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-GATED_PREFIXES = ("bench_suggest/gp", "bench_service/")
+GATED_PREFIXES = ("bench_suggest/gp", "bench_service/", "bench_fleet/")
 # Reported but never gated: the synchronous (prefetch=0) row is the
 # deliberately-slow pre-pipeline reference, not a served path.
 UNGATED_ROWS = ("bench_service/suggest_contended_sync/c8",)

@@ -18,7 +18,9 @@ REPRO_CONTENTION=1 python -m pytest -q -m contention tests/test_pipeline.py
 
 echo "== tier-2: perf gate =="
 # --strict: a quick-sweep row missing from the committed BENCH_suggest.json
-# fails CI (stale baseline after a bench rename/addition)
+# fails CI (stale baseline after a bench rename/addition).  Gated rows
+# include the fleet SLO (bench_fleet/suggest/k8c4: 8 experiments x 4
+# clients through the HTTP router, gated on p50 — see API.md §Fleet).
 bench_out=$(mktemp)
 if ! python scripts/bench_check.py --strict | tee "$bench_out"; then
     echo

@@ -54,6 +54,13 @@ class SuggestionClient(abc.ABC):
     def release(self, exp_id: str, suggestion_id: str) -> bool:
         """Return an unevaluated pending suggestion to the budget."""
 
+    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+        """Park a pending suggestion for re-serving (dead-worker
+        recovery): it keeps its id and constant-liar lie, and the next
+        ``suggest`` hands it out exactly once.  Backends without fleet
+        support decline."""
+        return False
+
     @abc.abstractmethod
     def status(self, exp_id: str) -> StatusResponse:
         ...

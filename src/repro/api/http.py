@@ -14,9 +14,11 @@ Endpoint map (full schemas in API.md):
   POST /v1/experiments/{id}/observations        observe
   POST /v1/experiments/{id}/trials/{tid}/report report    {step, value}
   POST /v1/experiments/{id}/release             release   {suggestion_id}
+  POST /v1/experiments/{id}/requeue             requeue   {suggestion_id}
   POST /v1/experiments/{id}/stop                stop      {state}
   GET  /v1/experiments/{id}/best                best
   GET  /v1/healthz                              liveness
+  GET  /v1/load                                 shard load (fleet admission)
 """
 from __future__ import annotations
 
@@ -34,8 +36,8 @@ from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 E_INTERNAL, ObserveRequest, ObserveResponse,
                                 PROTOCOL_VERSION, ReleaseRequest,
                                 ReleaseResponse, ReportRequest,
-                                StatusResponse, StopRequest, SuggestBatch,
-                                SuggestRequest)
+                                RequeueRequest, StatusResponse, StopRequest,
+                                SuggestBatch, SuggestRequest)
 from repro.core.store import Store
 
 
@@ -46,6 +48,8 @@ def _parse_path(path: str):
     parts = [p for p in path.split("?")[0].split("/") if p]
     if parts == ["v1", "healthz"]:
         return None, "healthz", None
+    if parts == ["v1", "load"]:
+        return None, "load", None
     if not parts or parts[0] != "v1" or len(parts) < 2 \
             or parts[1] != "experiments" or len(parts) > 6:
         raise ApiError(E_BAD_REQUEST, f"no route for {path!r}")
@@ -56,7 +60,7 @@ def _parse_path(path: str):
         return exp_id, "report", parts[4]
     action = parts[3] if len(parts) > 3 else None
     if action not in (None, "suggestions", "observations", "release",
-                      "stop", "best"):
+                      "requeue", "stop", "best"):
         raise ApiError(E_BAD_REQUEST, f"unknown action {action!r}")
     return exp_id, action, None
 
@@ -112,6 +116,10 @@ class _Handler(BaseHTTPRequestHandler):
         b = self.backend
         if action == "healthz":
             return {"ok": True, "version": PROTOCOL_VERSION}
+        if action == "load":
+            # shard saturation snapshot — the fleet manager's admission-
+            # control probe (FitExecutor backlog + duty cycle)
+            return b.load()
         if method == "POST" and exp_id is None and action is None:
             req = CreateExperiment.from_json(self._read_body())
             return b.create_experiment(req).to_json()
@@ -137,6 +145,9 @@ class _Handler(BaseHTTPRequestHandler):
             req = ReleaseRequest.from_json(body)
             ok = b.release(req.exp_id, req.suggestion_id)
             return ReleaseResponse(released=ok).to_json()
+        if action == "requeue":
+            rq = RequeueRequest.from_json(body)
+            return {"requeued": b.requeue(rq.exp_id, rq.suggestion_id)}
         if action == "stop":
             req = StopRequest.from_json(body)
             return b.stop(req.exp_id, req.state).to_json()
@@ -312,6 +323,16 @@ class HTTPClient(SuggestionClient):
         resp = self._call("POST", f"/v1/experiments/{exp_id}/release",
                           {"suggestion_id": suggestion_id})
         return ReleaseResponse.from_json(resp).released
+
+    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+        resp = self._call("POST", f"/v1/experiments/{exp_id}/requeue",
+                          {"suggestion_id": suggestion_id})
+        return bool(resp.get("requeued", False))
+
+    def load(self) -> dict:
+        """Shard saturation snapshot (``GET /v1/load``) — consumed by the
+        fleet manager's admission/probe loop."""
+        return self._call("GET", "/v1/load")
 
     def status(self, exp_id: str) -> StatusResponse:
         return StatusResponse.from_json(

@@ -36,6 +36,7 @@ from __future__ import annotations
 import json
 import threading
 import time
+import uuid
 from typing import Dict, List, Optional, Set, Union
 
 from repro.api import pipeline
@@ -70,6 +71,8 @@ class _ExperimentState:
         self.lock = threading.RLock()        # bookkeeping (fast paths)
         self.opt_lock = threading.RLock()    # optimizer compute (slow paths)
         self.pending: Dict[str, Suggestion] = {}
+        self.orphaned: List[Suggestion] = []  # requeued pending (dead worker)
+        self.sparse_ids: Set[str] = set()     # served off the sparse posterior
         self.closed: Set[str] = set()
         self.observed = 0
         self.failures = 0
@@ -84,16 +87,26 @@ class _ExperimentState:
         self.staleness = max(1, cfg.staleness)
         self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
                       "invalidated": 0, "prefilled": 0, "prewarmed": 0,
-                      "sparse_prefilled": 0, "sparse_served": 0}
+                      "sparse_prefilled": 0, "sparse_served": 0,
+                      "requeued": 0, "requeue_served": 0,
+                      # sparse-vs-exact quality on finished trials (the
+                      # SPARSE_MAX tuning signal, ROADMAP sparse quality)
+                      "sparse_obs": 0, "sparse_regret": 0.0,
+                      "exact_obs": 0, "exact_regret": 0.0}
         self.last_mirror = 0.0       # status.json mirror throttle
         self.appends = 0             # observes between log append + account
         self.append_cv = threading.Condition(self.lock)
         self._seq = 0
+        self._sid_nonce = uuid.uuid4().hex[:6]
         self._snap_version = -1      # stopper.version last persisted
 
     def next_suggestion_id(self) -> str:
         self._seq += 1
-        return f"s{self._seq:05d}"
+        # the nonce makes ids unique across state *incarnations*: after a
+        # shard dies, the adopting shard's counter restarts, and a bare
+        # sequence number would re-mint ids that are already in the
+        # observation log (breaking closed-set dedupe for stale workers)
+        return f"s{self._sid_nonce}-{self._seq:05d}"
 
     def pump_depth(self) -> int:
         """Resolved prefetch depth: an explicit ``cfg.prefetch`` wins;
@@ -127,8 +140,23 @@ class LocalClient(SuggestionClient):
 
     # ------------------------------------------------------------ lifecycle
     def create_experiment(self, req: CreateExperiment) -> CreateResponse:
-        cfg = ExperimentConfig.from_json(req.config)
         exp_id = req.exp_id
+        if req.config:
+            cfg = ExperimentConfig.from_json(req.config)
+        else:
+            # config-less resume (fleet failover): a new owner shard
+            # adopts an experiment it has never seen straight out of the
+            # shared system-of-record store
+            with self._lock:
+                live = self._exps.get(exp_id) if exp_id else None
+            if live is not None:
+                cfg = live.cfg
+            else:
+                try:
+                    cfg = self.store.load_config(exp_id)
+                except FileNotFoundError:
+                    raise ApiError(E_UNKNOWN_EXPERIMENT,
+                                   f"no experiment {exp_id!r} to adopt")
         with self._lock:
             on_disk = (exp_id is not None
                        and (self.store.exp_dir(exp_id) / "config.json")
@@ -248,11 +276,16 @@ class LocalClient(SuggestionClient):
         return state
 
     # ------------------------------------------------------------- pipeline
-    def _mint(self, state: _ExperimentState, assignment) -> Suggestion:
+    def _mint(self, state: _ExperimentState, assignment,
+              sparse: bool = False) -> Suggestion:
         """Turn an assignment into a tracked pending suggestion.  MUST be
-        called with ``state.lock`` held."""
+        called with ``state.lock`` held.  ``sparse`` marks suggestions
+        served off the approximate posterior so their eventual outcome
+        feeds the sparse-vs-exact quality counters."""
         s = Suggestion(state.next_suggestion_id(), assignment)
         state.pending[s.suggestion_id] = s
+        if sparse:
+            state.sparse_ids.add(s.suggestion_id)
         return s
 
     def _ensure_pump(self, exp_id: str, state: _ExperimentState) -> None:
@@ -306,12 +339,24 @@ class LocalClient(SuggestionClient):
         with state.lock:
             if state.stopped:
                 return SuggestBatch([], remaining=0)
+            # requeued (orphaned) suggestions are served first: they are
+            # already pending — same id, same constant-liar lie — so they
+            # consume no budget headroom and are handed out exactly once
+            batch: List[Suggestion] = []
+            while state.orphaned and len(batch) < int(count):
+                s = state.orphaned.pop(0)
+                if (s.suggestion_id in state.closed
+                        or s.suggestion_id not in state.pending):
+                    continue    # observed/released while parked
+                batch.append(s)
+                state.stats["requeue_served"] += 1
             headroom = (state.cfg.budget - state.observed
                         - len(state.pending))
-            n = max(0, min(int(count), headroom))
+            n = max(0, min(int(count) - len(batch), headroom))
             fresh, stale = pop_prefetched(state, n)
-            batch = [self._mint(state, a) for a in fresh]
-            need = n - len(batch)
+            batch.extend(self._mint(state, it.assignment, sparse=it.sparse)
+                         for it in fresh)
+            need = n - len(fresh)
             if stale:
                 state.ops.extend(("forget", a) for a in stale)
             pump = state.pump
@@ -375,6 +420,18 @@ class LocalClient(SuggestionClient):
             state.append_cv.notify_all()
             if req.failed:
                 state.failures += 1
+            # sparse-vs-exact quality: instantaneous regret of this
+            # finished trial against the best KNOWN BEFORE it, bucketed
+            # by which posterior served its suggestion — the SPARSE_MAX
+            # tuning signal (ROADMAP: sparse-posterior quality)
+            was_sparse = req.suggestion_id in state.sparse_ids
+            state.sparse_ids.discard(req.suggestion_id)
+            if not obs.failed and obs.value is not None:
+                regret = (max(0.0, state.best.value - obs.value)
+                          if state.best is not None else 0.0)
+                bucket = "sparse" if was_sparse else "exact"
+                state.stats[bucket + "_obs"] += 1
+                state.stats[bucket + "_regret"] += regret
             if (not obs.failed and obs.value is not None
                     and (state.best is None
                          or obs.value > state.best.value)):
@@ -390,12 +447,25 @@ class LocalClient(SuggestionClient):
             self.store.update_status(req.exp_id, **fields)
         else:
             self._mirror_status(req.exp_id, state, fields)
+        # the trial is terminal: its metric stream will never grow again —
+        # evict its file handle from the store LRU so a fleet-scale churn
+        # of short trials can't pin thousands of open files
+        self._evict_trial_handles(req.exp_id, req.suggestion_id,
+                                  req.trial_id)
         if pump is not None and pump.alive:
             pump.wake()     # fold + staleness sweep + refill
         else:
             self._drain_sync(state)
         return ObserveResponse(accepted=True, duplicate=False,
                                observations=observed)
+
+    def _evict_trial_handles(self, exp_id: str, *trial_keys: str) -> None:
+        """Close the cached append handles of a terminal trial's metric
+        stream (keyed by suggestion_id or trial_id — evict both)."""
+        for key in trial_keys:
+            if key:
+                self.store.release_handle(self.store.metric_path(exp_id,
+                                                                 key))
 
     def _mirror_status(self, exp_id: str, state: _ExperimentState,
                        fields: Dict) -> None:
@@ -437,6 +507,9 @@ class LocalClient(SuggestionClient):
                 return Decision(next_rung=None, seq=state.metric_seq)
             decision = state.stopper.report(key, req.step, req.value)
             self._snapshot_rungs(req.exp_id, state)
+            if decision == DECISION_STOP:
+                # final prune: the stream is closed — drop its handle
+                self._evict_trial_handles(req.exp_id, key)
             return Decision(decision,
                             next_rung=state.stopper.next_rung(key),
                             seq=state.metric_seq)
@@ -445,6 +518,7 @@ class LocalClient(SuggestionClient):
         state = self._state(exp_id)
         with state.lock:
             s = state.pending.pop(suggestion_id, None)
+            state.sparse_ids.discard(suggestion_id)
             if s is not None:
                 # never coming back: let the optimizer drop its
                 # constant-liar bookkeeping for this point
@@ -456,6 +530,44 @@ class LocalClient(SuggestionClient):
             else:
                 self._drain_sync(state)
         return s is not None
+
+    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+        """Dead-worker recovery (fleet event loop): park a *pending*
+        suggestion for re-serving.  Unlike ``release`` the suggestion
+        keeps its id and its constant-liar lie — the next ``suggest``
+        hands it (exactly once) to a surviving worker, so the optimizer
+        sees no retraction and the observation, whoever produces it,
+        dedupes by the same suggestion_id."""
+        state = self._state(exp_id)
+        with state.lock:
+            s = state.pending.get(suggestion_id)
+            if s is None or suggestion_id in state.closed or state.stopped:
+                return False
+            if all(o.suggestion_id != suggestion_id
+                   for o in state.orphaned):
+                state.orphaned.append(s)
+                state.stats["requeued"] += 1
+            return True
+
+    def load(self) -> Dict:
+        """Shard-level load summary — the fleet's admission-control
+        signal: live experiment count, total pending, and the shared
+        FitExecutor's queue depth (``backlog``) + recent duty cycle."""
+        with self._lock:
+            states = list(self._exps.values())
+        live = pending = prefetched = 0
+        for st in states:
+            with st.lock:
+                if not st.stopped and st.observed < st.cfg.budget:
+                    live += 1
+                pending += len(st.pending)
+                prefetched += len(st.queue)
+        ex = pipeline.executor_snapshot() or {}
+        return {"experiments": len(states), "live": live,
+                "pending": pending, "prefetched": prefetched,
+                "backlog": int(ex.get("backlog", 0)),
+                "duty": float(ex.get("duty", 0.0)),
+                "executor": ex or None}
 
     # -------------------------------------------------------------- queries
     def status(self, exp_id: str) -> StatusResponse:
@@ -489,6 +601,17 @@ class LocalClient(SuggestionClient):
             schedule = state.optimizer.refit_schedule()
             if schedule is not None:
                 pump_stats["refit"] = schedule
+            # sparse-vs-exact serving quality (mean instantaneous regret
+            # on finished trials) — the SPARSE_MAX tuning readout
+            n_s, n_e = state.stats["sparse_obs"], state.stats["exact_obs"]
+            pump_stats["quality"] = {
+                "sparse_n": n_s, "exact_n": n_e,
+                "sparse_mean_regret": (
+                    round(state.stats["sparse_regret"] / n_s, 6)
+                    if n_s else None),
+                "exact_mean_regret": (
+                    round(state.stats["exact_regret"] / n_e, 6)
+                    if n_e else None)}
             if pump is not None:
                 # None until a fit was actually submitted — a monitoring
                 # read must not spawn the executor's worker pool
@@ -533,6 +656,8 @@ class LocalClient(SuggestionClient):
                 with exp.lock:
                     doomed = [s.assignment for s in exp.pending.values()]
                     exp.pending.clear()
+                    exp.orphaned.clear()
+                    exp.sparse_ids.clear()
                     # unblock any parked miss slots with empty batches
                     slots, exp.miss_slots = exp.miss_slots, []
                     for sl in slots:

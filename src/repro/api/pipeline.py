@@ -50,6 +50,7 @@ from __future__ import annotations
 import heapq
 import os
 import threading
+import time
 from typing import Any, Callable, Dict, List, Optional
 
 #: Largest ``ask`` the pipeline issues per optimizer-lock hold (pump
@@ -94,6 +95,10 @@ class FitExecutor:
     #: idle wait between queue polls (wakes are event-driven via submit)
     IDLE_WAIT = 0.25
 
+    #: window (seconds) over which the duty cycle decays — admission
+    #: control wants *recent* saturation, not the lifetime average
+    DUTY_WINDOW = 30.0
+
     def __init__(self, workers: Optional[int] = None):
         if workers is None:
             # a small shared pool: fits saturate cores (JAX releases the
@@ -107,6 +112,11 @@ class FitExecutor:
         self._seq = 0
         self._stopped = False
         self.stats = {"executed": 0, "coalesced": 0, "requeued": 0}
+        # duty-cycle accounting (the fleet's admission-control signal):
+        # busy worker-seconds, decayed over DUTY_WINDOW so a burst of
+        # fits shows up — and clears — within one window
+        self._duty_busy = 0.0
+        self._duty_mark = time.monotonic()
         self._threads = [
             threading.Thread(target=self._run, name=f"fit-exec-{i}",
                              daemon=True)
@@ -174,10 +184,33 @@ class FitExecutor:
                 if t is not threading.current_thread():
                     t.join(timeout=5.0)
 
+    def _decay_duty(self, now: float) -> None:
+        """Exponential decay of the busy accumulator (holding _cv)."""
+        dt = now - self._duty_mark
+        if dt > 0:
+            self._duty_busy *= 0.5 ** (dt / self.DUTY_WINDOW)
+            self._duty_mark = now
+
+    def duty(self) -> float:
+        """Fraction of worker capacity spent running fits over the recent
+        window, in [0, 1] — together with ``backlog`` this is the shard
+        saturation signal the FleetManager admits against."""
+        with self._cv:
+            now = time.monotonic()
+            self._decay_duty(now)
+            # a freshly-started executor has no window yet; normalize by
+            # the half-life-weighted capacity of the window
+            cap = self.workers * self.DUTY_WINDOW / 2.0
+            return min(1.0, self._duty_busy / cap) if cap > 0 else 0.0
+
     def snapshot(self) -> Dict[str, Any]:
         with self._cv:
+            now = time.monotonic()
+            self._decay_duty(now)
+            cap = self.workers * self.DUTY_WINDOW / 2.0
+            duty = min(1.0, self._duty_busy / cap) if cap > 0 else 0.0
             return dict(self.stats, backlog=len(self._jobs),
-                        workers=self.workers)
+                        workers=self.workers, duty=round(duty, 4))
 
     # ----------------------------------------------------------- workers
     def _pop(self):
@@ -207,6 +240,7 @@ class FitExecutor:
                 continue
             key, fn, prio = item
             err = None
+            t0 = time.monotonic()
             try:
                 again = bool(fn())
             except Exception as e:  # noqa: executor must survive any job
@@ -214,6 +248,8 @@ class FitExecutor:
                 err = f"{type(e).__name__}: {e}"
             with self._cv:
                 self._active.discard(key)   # before any re-submit
+                self._decay_duty(time.monotonic())
+                self._duty_busy += time.monotonic() - t0
                 self.stats["executed"] += 1
                 if again:
                     self.stats["requeued"] += 1
@@ -308,11 +344,14 @@ def drain_ops(state) -> int:
 
 
 def pop_prefetched(state, want: int):
-    """Pop up to ``want`` fresh queue items; returns (assignments, stale
-    assignments).  MUST be called with ``state.lock`` held.  Stale items
-    (older than the K-observation staleness bound) are skimmed off and
-    returned for lie retirement — they are never served."""
-    fresh: List[Dict[str, Any]] = []
+    """Pop up to ``want`` fresh queue items; returns (fresh
+    ``PrefetchItem``s, stale assignments).  MUST be called with
+    ``state.lock`` held.  Stale items (older than the K-observation
+    staleness bound) are skimmed off and returned for lie retirement —
+    they are never served.  Fresh items keep their ``sparse`` flag so
+    the mint step can attribute the served suggestion to the exact or
+    approximate posterior (the SPARSE_MAX quality counters)."""
+    fresh: List[PrefetchItem] = []
     stale: List[Dict[str, Any]] = []
     sparse_served = 0
     while state.queue and len(fresh) < want:
@@ -323,7 +362,7 @@ def pop_prefetched(state, want: int):
         if state.observed - item.born_obs >= state.staleness:
             stale.append(item.assignment)
         else:
-            fresh.append(item.assignment)
+            fresh.append(item)
             sparse_served += bool(item.sparse)
     if stale:
         state.stats["invalidated"] += len(stale)

@@ -37,10 +37,12 @@ E_UNKNOWN_EXPERIMENT = "unknown_experiment"  # 404
 E_UNKNOWN_SUGGESTION = "unknown_suggestion"  # 404
 E_EXPERIMENT_EXISTS = "experiment_exists"    # 409
 E_INTERNAL = "internal"                      # 500
+E_FLEET_BUSY = "fleet_busy"                  # 503: every shard saturated
+E_WRONG_SHARD = "wrong_shard"                # 421: routed past a map change
 
 _HTTP_STATUS = {E_BAD_REQUEST: 400, E_UNKNOWN_EXPERIMENT: 404,
                 E_UNKNOWN_SUGGESTION: 404, E_EXPERIMENT_EXISTS: 409,
-                E_INTERNAL: 500}
+                E_INTERNAL: 500, E_FLEET_BUSY: 503, E_WRONG_SHARD: 421}
 
 
 class ApiError(Exception):
@@ -67,7 +69,12 @@ class ApiError(Exception):
 # ----------------------------------------------------------------- messages
 @dataclass
 class CreateExperiment:
-    """Create (or resume, when ``exp_id`` names an existing experiment)."""
+    """Create (or resume, when ``exp_id`` names an existing experiment).
+
+    ``config`` may be empty *only* together with an ``exp_id``: the
+    service then resumes the experiment from its stored config — the
+    fleet failover path (a new owner shard adopts an experiment it has
+    never seen, out of the shared system-of-record store)."""
     config: Dict[str, Any]                  # ExperimentConfig.to_json()
     exp_id: Optional[str] = None
 
@@ -77,9 +84,9 @@ class CreateExperiment:
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CreateExperiment":
-        if "config" not in d:
+        if not d.get("config") and not d.get("exp_id"):
             raise ApiError(E_BAD_REQUEST, "create requires 'config'")
-        return cls(config=d["config"], exp_id=d.get("exp_id"))
+        return cls(config=d.get("config") or {}, exp_id=d.get("exp_id"))
 
 
 @dataclass
@@ -384,3 +391,92 @@ class BestResponse:
     @classmethod
     def from_json(cls, d) -> "BestResponse":
         return cls(d.get("best"))
+
+
+# ------------------------------------------------------------------- fleet
+# Messages for the fleet control plane (repro.fleet): shards and
+# schedulers heartbeat to the FleetManager, which answers with the
+# current shard-map version so clients know when to re-route.  See
+# API.md §Fleet.
+
+@dataclass
+class RequeueRequest:
+    """Hand a *pending* suggestion back to the serving queue (dead-worker
+    recovery): the suggestion keeps its id and its constant-liar lie, and
+    the next ``suggest`` on this experiment serves it — exactly once —
+    before any fresh speculation."""
+    exp_id: str
+    suggestion_id: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id, "suggestion_id": self.suggestion_id}
+
+    @classmethod
+    def from_json(cls, d) -> "RequeueRequest":
+        if "suggestion_id" not in d:
+            raise ApiError(E_BAD_REQUEST, "requeue requires 'suggestion_id'")
+        return cls(d.get("exp_id", ""), d["suggestion_id"])
+
+
+@dataclass
+class HeartbeatRequest:
+    """One liveness beat from a worker (a scheduler process or a shard).
+    ``holdings`` maps exp_id -> the pending suggestion_ids this worker
+    currently holds; the manager requeues exactly these if the worker is
+    later declared dead."""
+    worker_id: str
+    kind: str = "scheduler"                 # scheduler | shard
+    holdings: Dict[str, List[str]] = field(default_factory=dict)
+    seq: int = 0                            # per-worker beat counter
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"worker_id": self.worker_id, "kind": self.kind,
+                "holdings": self.holdings, "seq": self.seq}
+
+    @classmethod
+    def from_json(cls, d) -> "HeartbeatRequest":
+        if "worker_id" not in d:
+            raise ApiError(E_BAD_REQUEST, "heartbeat requires 'worker_id'")
+        return cls(d["worker_id"], d.get("kind", "scheduler"),
+                   {k: list(v) for k, v in (d.get("holdings") or {}).items()},
+                   int(d.get("seq", 0)))
+
+
+@dataclass
+class HeartbeatResponse:
+    """``map_version`` lets a client detect shard-map changes without
+    polling ``/fleet/map``; ``period`` is the manager-prescribed beat
+    interval (seconds)."""
+    state: str = "alive"                    # registered|alive|suspect|dead
+    map_version: int = 0
+    period: float = 1.0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"state": self.state, "map_version": self.map_version,
+                "period": self.period}
+
+    @classmethod
+    def from_json(cls, d) -> "HeartbeatResponse":
+        return cls(d.get("state", "alive"), int(d.get("map_version", 0)),
+                   float(d.get("period", 1.0)))
+
+
+@dataclass
+class ShardMap:
+    """Versioned routing table: consistent-hash ownership plus explicit
+    per-experiment overrides (admission-control redirects and failover
+    reassignments).  The version increments on every membership or
+    override change; clients treat a version bump as 'recompute all
+    routes'."""
+    version: int = 0
+    shards: Dict[str, str] = field(default_factory=dict)   # shard_id -> url
+    overrides: Dict[str, str] = field(default_factory=dict)  # exp -> shard_id
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"version": self.version, "shards": self.shards,
+                "overrides": self.overrides}
+
+    @classmethod
+    def from_json(cls, d) -> "ShardMap":
+        return cls(int(d.get("version", 0)), dict(d.get("shards") or {}),
+                   dict(d.get("overrides") or {}))

@@ -90,19 +90,28 @@ class Orchestrator:
                                         float]] = None,
             cluster: Optional[str] = None, background: bool = False,
             exp_id: Optional[str] = None,
-            service: Optional[str] = None) -> str:
+            service: Optional[str] = None,
+            fleet: Optional[str] = None) -> str:
         """Start (or resume) an experiment.  Resuming an existing exp_id
         replays the observation log into the service's optimizer exactly
         once.  With ``service=URL`` the suggest/observe loop runs against
-        a remote ``repro serve-api`` process; trial logs and checkpoints
-        stay in this worker's local store."""
+        a remote ``repro serve-api`` process; with ``fleet=URL`` it runs
+        through a ``repro serve-fleet`` manager, which routes the
+        experiment to its owning shard (API.md §Fleet).  Trial logs and
+        checkpoints stay in this worker's local store either way."""
         if trial_fn is None:
             if not cfg.entrypoint:
                 raise ValueError("need trial_fn or cfg.entrypoint")
             trial_fn = resolve_entrypoint(cfg.entrypoint)
 
         from repro.api.http import HTTPClient
-        client = HTTPClient(service) if service else self.client
+        if fleet:
+            from repro.fleet.router import FleetClient
+            client = FleetClient(fleet)
+        elif service:
+            client = HTTPClient(service)
+        else:
+            client = self.client
         created = client.create_experiment(
             CreateExperiment(config=cfg.to_json(), exp_id=exp_id))
         exp_id = created.exp_id

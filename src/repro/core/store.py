@@ -184,6 +184,27 @@ class Store:
             f.write(line + "\n")
             f.flush()   # tail/iter_logs readers must see every line
 
+    def release_handle(self, p: pathlib.Path) -> bool:
+        """Evict one cached append handle (a trial reached a terminal
+        state and its metric/log stream will never grow again).  At fleet
+        scale this is what keeps open-file count proportional to *live*
+        trials instead of total trials; a later append transparently
+        reopens.  Returns True when a handle was actually closed."""
+        with self._log_lock:
+            f = self._log_handles.pop(p, None)
+        if f is None:
+            return False
+        try:
+            f.close()
+        except OSError:
+            pass
+        return True
+
+    def open_handles(self) -> int:
+        """Current size of the append-handle LRU (cap/eviction tests)."""
+        with self._log_lock:
+            return len(self._log_handles)
+
     def close_logs(self) -> None:
         """Flush and close all cached trial-log handles."""
         with self._log_lock:

@@ -1,0 +1,28 @@
+"""Fleet control plane: shard many experiments across N suggestion-service
+processes (ROADMAP: "thousands of concurrent experiments").
+
+Pieces:
+
+* :mod:`repro.fleet.hashring`  — consistent-hash experiment→shard routing
+* :mod:`repro.fleet.heartbeat` — worker liveness state machine
+  (registered → alive → suspect → dead, monotonic-clock deadlines)
+* :mod:`repro.fleet.manager`   — FleetManager: shard map + admission
+  control + the event loop that detects dead workers/shards and requeues
+  their pending suggestions
+* :mod:`repro.fleet.router`    — FleetClient: a ``SuggestionClient`` that
+  makes the whole fleet look like one service
+* :mod:`repro.fleet.serve`     — the manager's HTTP surface +
+  ``repro serve-fleet``
+
+See API.md §Fleet for the protocol and failure-mode table.
+"""
+from repro.fleet.hashring import HashRing
+from repro.fleet.heartbeat import (S_ALIVE, S_DEAD, S_REGISTERED, S_SUSPECT,
+                                   WorkerRegistry)
+from repro.fleet.manager import FleetManager
+from repro.fleet.router import FleetClient
+from repro.fleet.serve import FleetServer, serve_fleet
+
+__all__ = ["HashRing", "WorkerRegistry", "FleetManager", "FleetClient",
+           "FleetServer", "serve_fleet",
+           "S_REGISTERED", "S_ALIVE", "S_SUSPECT", "S_DEAD"]

@@ -1,0 +1,377 @@
+"""FleetManager: the control plane that shards experiments across N
+suggestion-service processes.
+
+Responsibilities:
+
+* **Routing truth** — owns the consistent-hash ring and the versioned
+  :class:`~repro.api.protocol.ShardMap` (ring ownership + per-experiment
+  overrides).  Routers cache the map and re-fetch on a version bump.
+* **Admission control** — ``create_experiment`` consults the target
+  shard's last load probe (FitExecutor ``backlog`` + ``duty`` cycle, the
+  PR 5 signal): a saturated shard's new experiment is redirected to the
+  least-loaded eligible shard (recorded as a map override), and when the
+  whole fleet is saturated the create comes back as a typed
+  ``fleet_busy`` (HTTP 503) the caller can back off on.
+* **Liveness event loop** — one thread probes shards (pull: healthz +
+  load) and sweeps the worker registry (push: scheduler heartbeats
+  carrying their pending-suggestion holdings).  A scheduler declared
+  dead gets its leases revoked (``on_dead`` hook) and every pending
+  suggestion it held *requeued* on the owning shard — same id, same
+  constant-liar lie — so a survivor's next ``suggest`` serves it exactly
+  once.  A shard declared dead leaves the ring (version bump); its
+  experiments re-home to the ring successor, which adopts them out of
+  the shared system-of-record store via a config-less resume (pending
+  budget reclaims automatically on replay — the PR 1 restore semantics,
+  not a second fault path).
+
+The manager holds no optimizer state and writes nothing but routing
+metadata: shards stay the single writers of their experiments' logs.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.api.http import HTTPClient
+from repro.api.protocol import (ApiError, CreateExperiment, CreateResponse,
+                                E_FLEET_BUSY, E_UNKNOWN_EXPERIMENT,
+                                HeartbeatRequest, HeartbeatResponse,
+                                ShardMap)
+from repro.fleet.hashring import HashRing
+from repro.fleet.heartbeat import S_ALIVE, S_DEAD, WorkerRegistry
+
+
+class ShardHandle:
+    """One shard as the manager sees it: an id, a client (HTTP for real
+    processes, or any ``SuggestionClient`` with ``load``/``requeue`` for
+    in-process shards), and the last probe result."""
+
+    def __init__(self, shard_id: str, client, url: str = ""):
+        self.shard_id = shard_id
+        self.client = client
+        self.url = url
+        self.load: Dict[str, Any] = {}      # last successful probe
+        self.probe_failures = 0
+
+    def probe(self) -> bool:
+        """One liveness+load probe; True on success."""
+        try:
+            self.load = self.client.load() or {}
+            self.probe_failures = 0
+            return True
+        except Exception:
+            self.probe_failures += 1
+            return False
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"shard_id": self.shard_id, "url": self.url,
+                "load": self.load, "probe_failures": self.probe_failures}
+
+
+class FleetManager:
+    """See module docstring.  Thread-safe; ``start()`` spawns the event
+    loop, ``stop()`` joins it."""
+
+    #: admission thresholds: a shard is saturated when its fit-executor
+    #: backlog or recent duty cycle crosses these
+    ADMIT_BACKLOG = 4
+    ADMIT_DUTY = 0.75
+
+    def __init__(self, period: float = 1.0,
+                 suspect_after: Optional[float] = None,
+                 dead_after: Optional[float] = None,
+                 admit_backlog: Optional[int] = None,
+                 admit_duty: Optional[float] = None,
+                 replicas: int = 64):
+        self.registry = WorkerRegistry(period=period,
+                                       suspect_after=suspect_after,
+                                       dead_after=dead_after)
+        self.ring = HashRing(replicas=replicas)
+        self.admit_backlog = (self.ADMIT_BACKLOG if admit_backlog is None
+                              else int(admit_backlog))
+        self.admit_duty = (self.ADMIT_DUTY if admit_duty is None
+                           else float(admit_duty))
+        self._lock = threading.RLock()
+        self._shards: Dict[str, ShardHandle] = {}
+        self._overrides: Dict[str, str] = {}     # exp_id -> shard_id
+        self._experiments: Dict[str, str] = {}   # exp_id -> shard_id (last)
+        self._version = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.events: List[Dict[str, Any]] = []   # bounded audit trail
+        self.stats = {"ticks": 0, "requeued": 0, "dead_workers": 0,
+                      "dead_shards": 0, "redirects": 0, "busy_rejections": 0,
+                      "adopted": 0}
+
+    # ----------------------------------------------------------- membership
+    def add_shard(self, url_or_client, shard_id: Optional[str] = None
+                  ) -> ShardHandle:
+        """Attach one shard (a ``repro serve-api`` URL, or an in-process
+        client).  Bumps the map version."""
+        if isinstance(url_or_client, str):
+            url = url_or_client.rstrip("/")
+            client = HTTPClient(url, timeout=5.0)
+            shard_id = shard_id or url
+        else:
+            client = url_or_client
+            url = getattr(client, "base_url", "")
+            shard_id = shard_id or f"shard-{len(self._shards)}"
+        handle = ShardHandle(shard_id, client, url)
+        with self._lock:
+            self._shards[shard_id] = handle
+            self.ring.add(shard_id)
+            self._version += 1
+        self.registry.register(shard_id, kind="shard", url=url)
+        return handle
+
+    def remove_shard(self, shard_id: str) -> None:
+        """Administrative removal (drain); dead shards go through
+        ``_on_dead_shard`` instead."""
+        with self._lock:
+            self._shards.pop(shard_id, None)
+            self.ring.remove(shard_id)
+            self._purge_overrides(shard_id)
+            self._version += 1
+
+    def _purge_overrides(self, shard_id: str) -> None:
+        # holding self._lock
+        for exp, sid in list(self._overrides.items()):
+            if sid == shard_id:
+                del self._overrides[exp]
+
+    # -------------------------------------------------------------- routing
+    def shard_map(self) -> ShardMap:
+        with self._lock:
+            return ShardMap(version=self._version,
+                            shards={s.shard_id: s.url
+                                    for s in self._shards.values()},
+                            overrides=dict(self._overrides))
+
+    def owner_of(self, exp_id: str) -> Optional[ShardHandle]:
+        with self._lock:
+            sid = self._overrides.get(exp_id) or self.ring.owner(exp_id)
+            return self._shards.get(sid) if sid else None
+
+    def _eligible(self) -> List[ShardHandle]:
+        """Alive shards, least-loaded first (backlog, duty, live count)."""
+        out = []
+        with self._lock:
+            shards = list(self._shards.values())
+        for s in shards:
+            if self.registry.state(s.shard_id) in (S_ALIVE, None) \
+                    or self.registry.state(s.shard_id) == "registered":
+                out.append(s)
+        out.sort(key=lambda s: (int(s.load.get("backlog", 0)),
+                                float(s.load.get("duty", 0.0)),
+                                int(s.load.get("live", 0))))
+        return out
+
+    def _saturated(self, shard: ShardHandle) -> bool:
+        return (int(shard.load.get("backlog", 0)) >= self.admit_backlog
+                or float(shard.load.get("duty", 0.0)) >= self.admit_duty)
+
+    # ------------------------------------------------------------ admission
+    def create_experiment(self, req: CreateExperiment
+                          ) -> Tuple[CreateResponse, str, str, int]:
+        """Admission-controlled create: route to the hash owner unless it
+        is saturated, else redirect to the least-loaded eligible shard
+        (recorded as a map override); raise ``fleet_busy`` when every
+        shard is saturated.  Returns (response, shard_id, url, version)."""
+        exp_id = req.exp_id
+        if exp_id is None:
+            from repro.core.experiment import new_experiment_id
+            exp_id = new_experiment_id()
+            req = CreateExperiment(config=req.config, exp_id=exp_id)
+        target = self.owner_of(exp_id)
+        if target is None:
+            raise ApiError(E_FLEET_BUSY, "fleet has no shards")
+        if self._saturated(target):
+            eligible = [s for s in self._eligible()
+                        if not self._saturated(s)]
+            if not eligible:
+                with self._lock:
+                    self.stats["busy_rejections"] += 1
+                raise ApiError(
+                    E_FLEET_BUSY,
+                    f"all {len(self._shards)} shards saturated "
+                    f"(backlog>={self.admit_backlog} or "
+                    f"duty>={self.admit_duty}); retry later")
+            redirect = eligible[0]
+            with self._lock:
+                if redirect.shard_id != self.ring.owner(exp_id):
+                    self._overrides[exp_id] = redirect.shard_id
+                else:
+                    self._overrides.pop(exp_id, None)
+                self._version += 1
+                self.stats["redirects"] += 1
+            self._event("admission_redirect", exp_id=exp_id,
+                        from_shard=target.shard_id,
+                        to_shard=redirect.shard_id)
+            target = redirect
+        resp = target.client.create_experiment(req)
+        with self._lock:
+            self._experiments[resp.exp_id] = target.shard_id
+            version = self._version
+        return resp, target.shard_id, target.url, version
+
+    # ------------------------------------------------------------ liveness
+    def heartbeat(self, req: HeartbeatRequest,
+                  on_dead: Optional[Callable] = None) -> HeartbeatResponse:
+        state = self.registry.beat(req.worker_id, kind=req.kind,
+                                   holdings=req.holdings)
+        if on_dead is not None:
+            rec = self.registry.get(req.worker_id)
+            if rec is not None:
+                rec.on_dead = on_dead
+        with self._lock:
+            version = self._version
+        return HeartbeatResponse(state=state, map_version=version,
+                                 period=self.registry.period)
+
+    def start(self) -> "FleetManager":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._run,
+                                            name="fleet-manager",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, join: bool = True) -> None:
+        self._stop.set()
+        if join and self._thread is not None \
+                and self._thread is not threading.current_thread():
+            self._thread.join(timeout=10)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive() \
+            and not self._stop.is_set()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.tick()
+            except Exception as e:  # noqa: the loop must survive any tick
+                self._event("tick_error", error=f"{type(e).__name__}: {e}")
+            self._stop.wait(self.registry.period)
+
+    def tick(self) -> None:
+        """One event-loop round: probe shards in parallel, sweep the
+        registry, and act on every freshly-dead worker.  Public so tests
+        (and a paused manager) can drive the loop deterministically."""
+        with self._lock:
+            shards = list(self._shards.values())
+            self.stats["ticks"] += 1
+        threads = [threading.Thread(target=self._probe_one, args=(s,),
+                                    daemon=True) for s in shards]
+        for t in threads:
+            t.start()
+        for t in threads:
+            # a wedged shard must not stall the loop past ~one period
+            t.join(timeout=max(0.2, self.registry.period))
+        for rec in self.registry.sweep():
+            if rec.kind == "shard":
+                handle = self._shards.get(rec.worker_id)
+                if handle is not None and handle.probe_failures == 0:
+                    # silent past the deadline but no probe ever *failed*:
+                    # the shard is slow (startup, GC, load), not gone —
+                    # only refused/broken connections count as shard death
+                    self.registry.beat(rec.worker_id, kind="shard",
+                                       url=rec.url)
+                    continue
+                self._on_dead_shard(rec.worker_id)
+            else:
+                self._on_dead_worker(rec)
+
+    def _probe_one(self, shard: ShardHandle) -> None:
+        if shard.probe():
+            self.registry.beat(shard.shard_id, kind="shard", url=shard.url)
+
+    # --------------------------------------------------------- fault paths
+    def _on_dead_worker(self, rec) -> None:
+        """A scheduler stopped heartbeating: revoke its leases (hook) and
+        requeue every pending suggestion it held so survivors can claim
+        them.  Requeue (not release) keeps id + lie — the observation,
+        whoever finally produces it, dedupes service-side."""
+        with self._lock:
+            self.stats["dead_workers"] += 1
+        if rec.on_dead is not None:
+            try:
+                rec.on_dead(rec)
+            except Exception:
+                pass
+        requeued = 0
+        for exp_id, sids in rec.holdings.items():
+            shard = self.owner_of(exp_id)
+            if shard is None:
+                continue
+            for sid in sids:
+                try:
+                    if shard.client.requeue(exp_id, sid):
+                        requeued += 1
+                except ApiError:
+                    pass        # experiment gone / shard mid-failover
+        with self._lock:
+            self.stats["requeued"] += requeued
+        self._event("worker_dead", worker_id=rec.worker_id,
+                    requeued=requeued)
+
+    def _on_dead_shard(self, shard_id: str) -> None:
+        """A shard stopped answering probes: drop it from the ring (map
+        version bump) and re-home its experiments to their new ring
+        owners via config-less resume from the shared store.  The dead
+        shard's in-memory pending set is gone; the resume replay reclaims
+        that budget (PR 1 restore semantics)."""
+        with self._lock:
+            self.stats["dead_shards"] += 1
+            dead = self._shards.pop(shard_id, None)
+            self.ring.remove(shard_id)
+            self._purge_overrides(shard_id)
+            self._version += 1
+            orphans = [e for e, s in self._experiments.items()
+                       if s == shard_id]
+        adopted = 0
+        for exp_id in orphans:
+            new_owner = self.owner_of(exp_id)
+            if new_owner is None:
+                continue
+            try:
+                new_owner.client.create_experiment(
+                    CreateExperiment(config={}, exp_id=exp_id))
+                adopted += 1
+                with self._lock:
+                    self._experiments[exp_id] = new_owner.shard_id
+            except ApiError as e:
+                # store not shared with this shard (or experiment never
+                # persisted): routers with the config cached will re-home
+                # it on their next create
+                if e.code != E_UNKNOWN_EXPERIMENT:
+                    self._event("adopt_failed", exp_id=exp_id,
+                                error=str(e))
+            except Exception as e:
+                self._event("adopt_failed", exp_id=exp_id, error=str(e))
+        with self._lock:
+            self.stats["adopted"] += adopted
+        self._event("shard_dead", shard_id=shard_id,
+                    url=dead.url if dead else "", orphans=len(orphans),
+                    adopted=adopted)
+
+    # --------------------------------------------------------------- misc
+    def _event(self, kind: str, **fields) -> None:
+        with self._lock:
+            self.events.append(dict(fields, event=kind))
+            if len(self.events) > 256:
+                del self.events[:128]
+
+    def status(self) -> Dict[str, Any]:
+        with self._lock:
+            shards = {s.shard_id: s.to_json()
+                      for s in self._shards.values()}
+            version = self._version
+            stats = dict(self.stats)
+            experiments = len(self._experiments)
+        return {"version": version, "shards": shards,
+                "workers": self.registry.to_json(),
+                "experiments": experiments, "stats": stats,
+                "period": self.registry.period}

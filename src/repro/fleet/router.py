@@ -1,0 +1,339 @@
+"""FleetClient: a ``SuggestionClient`` that makes a sharded fleet look
+like one suggestion service.
+
+Routing: creates go through the FleetManager (that's where admission
+control lives — a saturated owner shard redirects the experiment, a
+saturated fleet answers ``fleet_busy``); everything after the create goes
+*directly* to the owning shard, so the manager is never on the
+suggest/observe hot path.  The owner is resolved from the cached
+:class:`~repro.api.protocol.ShardMap` — explicit override, else the
+consistent-hash ring the client rebuilds locally from the map (blake2b is
+process-stable, so client and manager always agree on ring ownership).
+
+Failure handling: a routed call that fails with ``service unreachable`` /
+``unknown_experiment`` / ``wrong_shard`` forces a map refresh, re-homes
+the experiment onto the current owner (a config-less create resumes it
+from the shared store — or from this client's cached config when the
+store isn't shared), and retries once.  Until the manager has declared
+the dead shard dead the retry may fail again; callers loop at their own
+cadence (the scheduler already treats suggest errors as transient).
+
+Heartbeats: a daemon thread beats every manager-prescribed ``period``
+carrying this worker's *holdings* — the pending suggestion_ids it has
+taken and not yet observed/released, per experiment.  If this process
+dies, the manager requeues exactly those so survivors pick them up.
+"""
+from __future__ import annotations
+
+import threading
+import uuid
+from typing import Dict, Optional, Set, Union
+
+from repro.api.client import SuggestionClient
+from repro.api.http import HTTPClient
+from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
+                                CreateResponse, Decision, E_INTERNAL,
+                                E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD,
+                                HeartbeatRequest, HeartbeatResponse,
+                                ObserveRequest, ObserveResponse,
+                                ReportRequest, ShardMap, StatusResponse,
+                                SuggestBatch)
+from repro.fleet.hashring import HashRing
+
+_RETRYABLE = (E_INTERNAL, E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD)
+
+
+class _InprocFleet:
+    """Manager access for a FleetClient living in the manager's process
+    (tests, single-process fleets)."""
+
+    def __init__(self, manager):
+        self.manager = manager
+
+    def fetch_map(self) -> ShardMap:
+        return self.manager.shard_map()
+
+    def create(self, req: CreateExperiment):
+        resp, shard_id, _url, version = self.manager.create_experiment(req)
+        return resp, shard_id, version
+
+    def heartbeat(self, req: HeartbeatRequest) -> HeartbeatResponse:
+        return self.manager.heartbeat(req)
+
+    def shard_client(self, shard_id: str, url: str):
+        handle = self.manager._shards.get(shard_id)
+        if handle is None:
+            raise ApiError(E_WRONG_SHARD, f"shard {shard_id!r} left the map")
+        return handle.client
+
+    def drop_urls(self, urls) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class _HttpFleet:
+    """Manager access over the wire (``repro serve-fleet``)."""
+
+    def __init__(self, url: str, timeout: float = 30.0):
+        self._c = HTTPClient(url, timeout=timeout)
+        self._clients: Dict[str, HTTPClient] = {}   # url -> client
+        self._lock = threading.Lock()
+        self.timeout = timeout
+
+    def fetch_map(self) -> ShardMap:
+        return ShardMap.from_json(self._c._call("GET", "/fleet/map"))
+
+    def create(self, req: CreateExperiment):
+        d = self._c._call("POST", "/fleet/experiments", req.to_json())
+        return (CreateResponse.from_json(d), d.get("shard_id", ""),
+                int(d.get("map_version", 0)))
+
+    def heartbeat(self, req: HeartbeatRequest) -> HeartbeatResponse:
+        return HeartbeatResponse.from_json(
+            self._c._call("POST", "/fleet/heartbeat", req.to_json()))
+
+    def shard_client(self, shard_id: str, url: str) -> HTTPClient:
+        if not url:
+            raise ApiError(E_WRONG_SHARD,
+                           f"shard {shard_id!r} has no routable url")
+        with self._lock:
+            c = self._clients.get(url)
+            if c is None:
+                c = self._clients[url] = HTTPClient(url, timeout=self.timeout)
+            return c
+
+    def drop_urls(self, urls) -> None:
+        """Sever keep-alive connections to shards that left the map: a
+        half-dead shard can keep serving already-open connections after
+        its listener is gone, and routing through one would split writes
+        across two owners."""
+        with self._lock:
+            dropped = [self._clients.pop(u) for u in urls
+                       if u in self._clients]
+        for c in dropped:
+            c.close()
+
+    def close(self) -> None:
+        with self._lock:
+            clients = list(self._clients.values())
+            self._clients.clear()
+        for c in clients:
+            c.close()
+        self._c.close()
+
+
+class FleetClient(SuggestionClient):
+    """One client for the whole fleet.  ``fleet`` is either a
+    ``FleetManager`` instance (in-process) or a ``repro serve-fleet`` URL.
+
+    ``replicas`` must match the manager's ring replicas (both default to
+    64) — ring ownership is computed on both sides.
+    """
+
+    def __init__(self, fleet, worker_id: Optional[str] = None,
+                 heartbeat: bool = True, timeout: float = 30.0,
+                 replicas: int = 64):
+        if isinstance(fleet, str):
+            self._proxy = _HttpFleet(fleet, timeout=timeout)
+        else:
+            self._proxy = _InprocFleet(fleet)
+        self.worker_id = worker_id or f"sched-{uuid.uuid4().hex[:8]}"
+        self._map = ShardMap(version=-1)
+        self._ring = HashRing(replicas=replicas)
+        self._replicas = replicas
+        self._assigned: Dict[str, str] = {}   # exp_id -> shard_id (authoritative)
+        self._configs: Dict[str, dict] = {}   # exp_id -> config (for re-home)
+        self._holdings: Dict[str, Set[str]] = {}
+        self._period = 1.0
+        self._seq = 0
+        self._lock = threading.RLock()
+        self._stop = threading.Event()
+        self._wake = threading.Event()
+        self._hb_thread: Optional[threading.Thread] = None
+        self._refresh_map(force=True)
+        if heartbeat:
+            self.beat()                       # register before first suggest
+            self._hb_thread = threading.Thread(target=self._beat_loop,
+                                               name="fleet-heartbeat",
+                                               daemon=True)
+            self._hb_thread.start()
+
+    # --------------------------------------------------------------- map
+    def _refresh_map(self, force: bool = False,
+                     version: Optional[int] = None) -> None:
+        with self._lock:
+            if not force and version is not None \
+                    and version <= self._map.version:
+                return
+            m = self._proxy.fetch_map()
+            if m.version == self._map.version and not force:
+                return
+            gone = [u for sid, u in self._map.shards.items()
+                    if u and u not in m.shards.values()]
+            self._map = m
+            ring = HashRing(replicas=self._replicas)
+            for sid in m.shards:
+                ring.add(sid)
+            self._ring = ring
+            # assignments to shards that left the map fall back to the ring
+            for exp, sid in list(self._assigned.items()):
+                if sid not in m.shards:
+                    del self._assigned[exp]
+        # outside the lock: connection close can block on socket teardown
+        if gone:
+            self._proxy.drop_urls(gone)
+
+    @property
+    def map_version(self) -> int:
+        with self._lock:
+            return self._map.version
+
+    def _owner(self, exp_id: str) -> str:
+        with self._lock:
+            sid = (self._map.overrides.get(exp_id)
+                   or self._assigned.get(exp_id)
+                   or self._ring.owner(exp_id))
+            if sid is None or sid not in self._map.shards:
+                sid = self._ring.owner(exp_id)
+            if sid is None:
+                raise ApiError(E_WRONG_SHARD, "fleet has no shards")
+            return sid
+
+    def _client_for(self, exp_id: str):
+        with self._lock:
+            sid = self._owner(exp_id)
+            url = self._map.shards.get(sid, "")
+        return self._proxy.shard_client(sid, url)
+
+    # ----------------------------------------------------------- routing
+    def _routed(self, exp_id: str, fn):
+        """Run ``fn(shard_client)`` against the current owner; on a
+        retryable failure refresh the map, re-home, retry once."""
+        try:
+            return fn(self._client_for(exp_id))
+        except ApiError as e:
+            if e.code not in _RETRYABLE:
+                raise
+        self._refresh_map(force=True)
+        self._rehome(exp_id)
+        return fn(self._client_for(exp_id))
+
+    def _rehome(self, exp_id: str) -> None:
+        """Make sure the current owner is serving ``exp_id``: config-less
+        create resumes it from the shared store; the cached config covers
+        fleets without one.  Idempotent — resuming a live experiment is a
+        no-op service-side."""
+        cfg = self._configs.get(exp_id, {})
+        try:
+            client = self._client_for(exp_id)
+            client.create_experiment(CreateExperiment(config=cfg,
+                                                      exp_id=exp_id))
+            with self._lock:
+                self._assigned[exp_id] = self._owner(exp_id)
+        except ApiError:
+            pass    # let the retried call surface the real failure
+
+    # ---------------------------------------------------------- protocol
+    def create_experiment(self, req: CreateExperiment) -> CreateResponse:
+        resp, shard_id, version = self._proxy.create(req)
+        with self._lock:
+            self._assigned[resp.exp_id] = shard_id
+            if req.config:
+                self._configs[resp.exp_id] = req.config
+        self._refresh_map(version=version)
+        return resp
+
+    def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
+        batch = self._routed(exp_id, lambda c: c.suggest(exp_id, count))
+        if batch.suggestions:
+            with self._lock:
+                held = self._holdings.setdefault(exp_id, set())
+                held.update(s.suggestion_id for s in batch.suggestions)
+            # new holdings must reach the manager promptly: a crash in
+            # the window before the next periodic beat would otherwise
+            # leave these suggestions unknown (and unrecoverable)
+            self._wake.set()
+        return batch
+
+    def observe(self, req: ObserveRequest) -> ObserveResponse:
+        resp = self._routed(req.exp_id, lambda c: c.observe(req))
+        self._drop_holding(req.exp_id, req.suggestion_id)
+        return resp
+
+    def report(self, req: ReportRequest) -> Decision:
+        return self._routed(req.exp_id, lambda c: c.report(req))
+
+    def release(self, exp_id: str, suggestion_id: str) -> bool:
+        ok = self._routed(exp_id,
+                          lambda c: c.release(exp_id, suggestion_id))
+        self._drop_holding(exp_id, suggestion_id)
+        return ok
+
+    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+        ok = self._routed(exp_id,
+                          lambda c: c.requeue(exp_id, suggestion_id))
+        self._drop_holding(exp_id, suggestion_id)
+        return ok
+
+    def status(self, exp_id: str) -> StatusResponse:
+        return self._routed(exp_id, lambda c: c.status(exp_id))
+
+    def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
+        resp = self._routed(exp_id, lambda c: c.stop(exp_id, state))
+        with self._lock:
+            self._holdings.pop(exp_id, None)
+        return resp
+
+    def best_response(self, exp_id: str) -> BestResponse:
+        return self._routed(exp_id, lambda c: c.best_response(exp_id))
+
+    # -------------------------------------------------------- heartbeats
+    def _drop_holding(self, exp_id: str, suggestion_id: str) -> None:
+        with self._lock:
+            held = self._holdings.get(exp_id)
+            if held is not None:
+                held.discard(suggestion_id)
+                if not held:
+                    del self._holdings[exp_id]
+
+    def holdings(self) -> Dict[str, list]:
+        with self._lock:
+            return {e: sorted(s) for e, s in self._holdings.items()}
+
+    def beat(self) -> HeartbeatResponse:
+        """Send one heartbeat now (the daemon thread calls this on its
+        own; tests call it to drive liveness deterministically)."""
+        with self._lock:
+            self._seq += 1
+            req = HeartbeatRequest(worker_id=self.worker_id,
+                                   kind="scheduler",
+                                   holdings=self.holdings(), seq=self._seq)
+        resp = self._proxy.heartbeat(req)
+        with self._lock:
+            self._period = max(0.05, float(resp.period))
+        if resp.map_version != self.map_version:
+            self._refresh_map(force=True)
+        return resp
+
+    def _beat_loop(self) -> None:
+        while True:
+            self._wake.wait(timeout=self._period)
+            self._wake.clear()
+            if self._stop.is_set():
+                return
+            try:
+                self.beat()
+            except Exception:
+                # manager briefly unreachable — keep beating; the
+                # registry's auto-register tolerates manager restarts
+                pass
+
+    def close(self) -> None:
+        self._stop.set()
+        self._wake.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=5)
+            self._hb_thread = None
+        self._proxy.close()

@@ -7,6 +7,7 @@
   repro delete EXPERIMENT_ID
   repro cluster destroy -n CLUSTER_NAME
   repro serve-api [--host H] [--port N]
+  repro serve-fleet [--shards N] [--shard URL ...] [--port N]
 
 `run` executes the experiment's entrypoint ("module:function") under the
 scheduler; with --background it returns immediately (monitor with
@@ -23,7 +24,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import signal
 import sys
+import threading
 import time
 
 import yaml
@@ -38,6 +41,30 @@ from repro.core.orchestrator import Orchestrator
 def _load(path: str):
     with open(path) as f:
         return yaml.safe_load(f)
+
+
+def _install_graceful_shutdown(shutdown_fn, what: str) -> threading.Event:
+    """SIGTERM/SIGINT -> graceful ``shutdown_fn()``.  The handler runs in
+    the main thread, which is blocked inside ``serve_forever`` — calling
+    ``httpd.shutdown()`` from there would deadlock, so the handler hands
+    the work to a helper thread and lets ``serve_forever`` return."""
+    fired = threading.Event()
+
+    def handler(signum, frame):
+        if fired.is_set():      # second signal: let the default kill us
+            signal.signal(signum, signal.SIG_DFL)
+            signal.raise_signal(signum)
+            return
+        fired.set()
+        name = signal.Signals(signum).name
+        print(f"\n{what}: {name} received, shutting down gracefully "
+              f"(again to force)", file=sys.stderr)
+        threading.Thread(target=shutdown_fn, name="graceful-shutdown",
+                         daemon=True).start()
+
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, handler)
+    return fired
 
 
 def main(argv=None) -> int:
@@ -62,6 +89,9 @@ def main(argv=None) -> int:
     p_run.add_argument("--service", default=None, metavar="URL",
                        help="drive a remote suggestion service "
                             "(repro serve-api) instead of in-process")
+    p_run.add_argument("--fleet", default=None, metavar="URL",
+                       help="drive a sharded fleet through its manager "
+                            "(repro serve-fleet, API.md §Fleet)")
     p_run.add_argument("--resume", default=None, metavar="EXPERIMENT_ID",
                        help="resume an existing experiment id")
 
@@ -70,11 +100,28 @@ def main(argv=None) -> int:
     p_serve.add_argument("--host", default="127.0.0.1")
     p_serve.add_argument("--port", type=int, default=8765)
 
+    p_fleet = sub.add_parser(
+        "serve-fleet",
+        help="serve a sharded fleet: manager + N shards (API.md §Fleet)")
+    p_fleet.add_argument("--host", default="127.0.0.1")
+    p_fleet.add_argument("--port", type=int, default=8766)
+    p_fleet.add_argument("--shards", type=int, default=0, metavar="N",
+                         help="spawn N in-process shards over this store")
+    p_fleet.add_argument("--shard", action="append", default=[],
+                         metavar="URL", dest="shard_urls",
+                         help="attach an external repro serve-api shard "
+                              "(repeatable)")
+    p_fleet.add_argument("--period", type=float, default=1.0,
+                         help="heartbeat period in seconds")
+
     p_status = sub.add_parser("status")
     p_status.add_argument("experiment_id")
     p_status.add_argument("--service", default=None, metavar="URL",
                           help="query a remote suggestion service instead "
                                "of the local store")
+    p_status.add_argument("--fleet", default=None, metavar="URL",
+                          help="query through a fleet manager "
+                               "(routes to the owning shard)")
 
     p_logs = sub.add_parser("logs")
     p_logs.add_argument("experiment_id")
@@ -110,12 +157,33 @@ def main(argv=None) -> int:
             print(f"cannot bind {args.host}:{args.port}: {e}",
                   file=sys.stderr)
             return 1
+        # handler first: the "listening on" line is the readiness signal,
+        # and a supervisor may SIGTERM the moment it sees it
+        _install_graceful_shutdown(server.shutdown, "serve-api")
         print(f"suggestion service (protocol v1) listening on {server.url}")
         print(f"store: {orch.store.root}  —  see API.md for the endpoints")
+        server.serve_forever()
+        print("serve-api: shut down cleanly", file=sys.stderr)
+        return 0
+
+    if args.cmd == "serve-fleet":
+        from repro.fleet import serve_fleet
         try:
-            server.serve_forever()
-        except KeyboardInterrupt:
-            server.shutdown()
+            server = serve_fleet(orch.store, shards=args.shards,
+                                 shard_urls=args.shard_urls,
+                                 host=args.host, port=args.port,
+                                 period=args.period)
+        except (OSError, ValueError) as e:
+            print(f"cannot start fleet: {e}", file=sys.stderr)
+            return 1
+        shards = server.manager.shard_map().shards
+        _install_graceful_shutdown(server.shutdown, "serve-fleet")
+        print(f"fleet manager (protocol v1) listening on {server.url}")
+        for sid, url in sorted(shards.items()):
+            print(f"  shard {sid}: {url}")
+        print(f"store: {orch.store.root}  —  see API.md §Fleet")
+        server.serve_forever()
+        print("serve-fleet: shut down cleanly", file=sys.stderr)
         return 0
 
     if args.cmd == "run":
@@ -124,7 +192,8 @@ def main(argv=None) -> int:
         try:
             exp_id = orch.run(cfg, cluster=args.cluster,
                               background=args.background,
-                              exp_id=args.resume, service=args.service)
+                              exp_id=args.resume, service=args.service,
+                              fleet=args.fleet)
         except ApiError as e:
             print(f"error: {e}", file=sys.stderr)
             return 1
@@ -144,7 +213,14 @@ def main(argv=None) -> int:
     if args.cmd == "status":
         from repro.api.protocol import ApiError
         try:
-            if args.service:
+            if args.fleet:
+                from repro.fleet import FleetClient
+                client = FleetClient(args.fleet, heartbeat=False)
+                try:
+                    st = client.status(args.experiment_id).to_json()
+                finally:
+                    client.close()
+            elif args.service:
                 from repro.api.http import HTTPClient
                 st = HTTPClient(args.service).status(
                     args.experiment_id).to_json()
