@@ -69,11 +69,72 @@ def run(k=8, clients=4, calls=25, shards=2, period=5.0):
     return [(f"suggest/k{k}c{clients}", samples)]
 
 
+def run_rebalance(k=8, calls=40, shards=2, period=5.0):
+    """Suggest latency *during a live shard-add rebalance* (ungated row:
+    tracked, not gated — rebalance cost is environment-sensitive).
+
+    One client hammers k experiments round-robin; a third of the way in,
+    a freshly-spawned shard joins via ``POST /fleet/shards`` and the
+    manager drains/adopts/transfers the minimal disruption set while the
+    client keeps calling.  Returned samples start at the add trigger, so
+    the committed p90 is the SLO "how slow does suggest get while the
+    fleet is rebalancing under you".
+    """
+    from repro.api.http import HTTPClient, serve_api
+
+    root = tempfile.mkdtemp()
+    srv = serve_fleet(root, shards=shards, period=period).start()
+    extra = None
+    try:
+        boss = FleetClient(srv.url, heartbeat=False)
+        budget = 2 * calls + 8
+        exp_ids = [boss.create_experiment(CreateExperiment(
+            config=_cfg_json(f"rb-{i}", budget),
+            exp_id=f"exp-rbb-{i:02d}")).exp_id for i in range(k)]
+        extra = serve_api(root).start()
+        mgr_http = HTTPClient(srv.url)
+        trigger = threading.Event()
+
+        def add_shard():
+            trigger.wait(30)
+            mgr_http._call("POST", "/fleet/shards",
+                           {"url": extra.url, "shard_id": "shard-add"})
+
+        adder = threading.Thread(target=add_shard, daemon=True)
+        adder.start()
+        cl = FleetClient(srv.url, worker_id="bench-rb", heartbeat=False)
+        samples = []
+        for n in range(calls):
+            if n == calls // 3:
+                trigger.set()
+            for eid in exp_ids:
+                t0 = time.perf_counter()
+                batch = cl.suggest(eid, 1)
+                dt = (time.perf_counter() - t0) * 1e6
+                if trigger.is_set():
+                    samples.append(dt)
+                for s in batch.suggestions:
+                    cl.observe(ObserveRequest(eid, s.suggestion_id,
+                                              s.assignment, value=0.5))
+        adder.join(timeout=30)
+        cl.close()
+        mgr_http.close()
+        boss.close()
+    finally:
+        srv.shutdown()
+        if extra is not None:
+            extra.shutdown()
+    return [(f"rebalance/k{k}", samples)]
+
+
 def main():
     print("# fleet suggest-latency SLO (k experiments x c clients, "
           "HTTP router)")
     print("row,p50_us,p90_us,n")
     for suffix, us in run():
+        print(f"bench_fleet/{suffix},{np.percentile(us, 50):.0f},"
+              f"{np.percentile(us, 90):.0f},{len(us)}")
+    for suffix, us in run_rebalance():
         print(f"bench_fleet/{suffix},{np.percentile(us, 50):.0f},"
               f"{np.percentile(us, 90):.0f},{len(us)}")
 

@@ -16,6 +16,11 @@ python -m pytest -x -q
 echo "== tier-2: multi-client contention tests =="
 REPRO_CONTENTION=1 python -m pytest -q -m contention tests/test_pipeline.py
 
+echo "== tier-2: chaos fault-injection tests =="
+# deterministic seeded fault plans (partition/heal/rebalance/failover);
+# fencing invariants must hold under every interleaving
+REPRO_CHAOS=1 python -m pytest -q -m chaos tests/test_fencing.py
+
 echo "== tier-2: perf gate =="
 # --strict: a quick-sweep row missing from the committed BENCH_suggest.json
 # fails CI (stale baseline after a bench rename/addition).  Gated rows

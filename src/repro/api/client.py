@@ -54,12 +54,23 @@ class SuggestionClient(abc.ABC):
     def release(self, exp_id: str, suggestion_id: str) -> bool:
         """Return an unevaluated pending suggestion to the budget."""
 
-    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+    def requeue(self, exp_id: str, suggestion_id: str,
+                assignment: Optional[dict] = None) -> bool:
         """Park a pending suggestion for re-serving (dead-worker
         recovery): it keeps its id and constant-liar lie, and the next
-        ``suggest`` hands it out exactly once.  Backends without fleet
-        support decline."""
+        ``suggest`` hands it out exactly once.  With ``assignment`` this
+        is the rebalance *transfer* form — install a previous owner's
+        pending under its original id.  Backends without fleet support
+        decline."""
         return False
+
+    def drain(self, exp_id: str):
+        """Quiesce one experiment ahead of an ownership handover and
+        return its parked pending suggestions
+        (:class:`repro.api.protocol.DrainResponse`).  Backends without
+        fleet support decline."""
+        from repro.api.protocol import DrainResponse
+        return DrainResponse(drained=False)
 
     @abc.abstractmethod
     def status(self, exp_id: str) -> StatusResponse:

@@ -15,6 +15,7 @@ Endpoint map (full schemas in API.md):
   POST /v1/experiments/{id}/trials/{tid}/report report    {step, value}
   POST /v1/experiments/{id}/release             release   {suggestion_id}
   POST /v1/experiments/{id}/requeue             requeue   {suggestion_id}
+  POST /v1/experiments/{id}/drain               drain (fleet handover)
   POST /v1/experiments/{id}/stop                stop      {state}
   GET  /v1/experiments/{id}/best                best
   GET  /v1/healthz                              liveness
@@ -24,15 +25,18 @@ from __future__ import annotations
 
 import http.client
 import json
+import random
 import threading
+import time
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Optional, Tuple, Union
+from typing import Callable, Optional, Tuple, Union
 
 from repro.api.client import SuggestionClient
 from repro.api.local import LocalClient
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
-                                CreateResponse, Decision, E_BAD_REQUEST,
+                                CreateResponse, Decision, DrainRequest,
+                                DrainResponse, E_BAD_REQUEST,
                                 E_INTERNAL, ObserveRequest, ObserveResponse,
                                 PROTOCOL_VERSION, ReleaseRequest,
                                 ReleaseResponse, ReportRequest,
@@ -60,7 +64,7 @@ def _parse_path(path: str):
         return exp_id, "report", parts[4]
     action = parts[3] if len(parts) > 3 else None
     if action not in (None, "suggestions", "observations", "release",
-                      "requeue", "stop", "best"):
+                      "requeue", "drain", "stop", "best"):
         raise ApiError(E_BAD_REQUEST, f"unknown action {action!r}")
     return exp_id, action, None
 
@@ -147,7 +151,11 @@ class _Handler(BaseHTTPRequestHandler):
             return ReleaseResponse(released=ok).to_json()
         if action == "requeue":
             rq = RequeueRequest.from_json(body)
-            return {"requeued": b.requeue(rq.exp_id, rq.suggestion_id)}
+            return {"requeued": b.requeue(rq.exp_id, rq.suggestion_id,
+                                          assignment=rq.assignment)}
+        if action == "drain":
+            req = DrainRequest.from_json(body)
+            return b.drain(req.exp_id).to_json()
         if action == "stop":
             req = StopRequest.from_json(body)
             return b.stop(req.exp_id, req.state).to_json()
@@ -203,6 +211,11 @@ def serve_api(store: Union[Store, str, LocalClient],
     return ApiServer(backend, host, port)
 
 
+RETRY_BASE_S = 0.05      # first backoff upper bound
+RETRY_CAP_S = 2.0        # backoff ceiling
+RETRY_ATTEMPTS = 4       # max total attempts for a retryable failure
+
+
 class HTTPClient(SuggestionClient):
     """Remote-worker side of the wire: a ``SuggestionClient`` that speaks
     the v1 JSON protocol against ``serve_api``.
@@ -211,10 +224,29 @@ class HTTPClient(SuggestionClient):
     per thread (the scheduler loop pays one TCP handshake total instead of
     one per request).  A request that fails on a *reused* connection —
     the server closed an idle keep-alive — transparently reconnects and
-    retries once; a failure on a fresh connection is surfaced as
-    ``service unreachable``, matching the old per-request behavior."""
+    retries immediately (the server never saw it).
 
-    def __init__(self, base_url: str, timeout: float = 30.0):
+    Beyond that, transient failures get **bounded exponential backoff
+    with full jitter** (base 50 ms doubling to a 2 s cap, ≤4 attempts,
+    ``sleep ~ U(0, min(cap, base·2^k))``): a send-phase failure or
+    refused connect provably never reached the service, so any verb may
+    retry; a *response*-phase failure is ambiguous (the server may have
+    committed), so only idempotent verbs retry — a non-idempotent resend
+    (suggest) would leak pending budget.  Per-client counters live in
+    ``self.stats`` and ride along in ``StatusResponse.transport`` so
+    tests assert retry behavior instead of sleeping.
+
+    ``fault_gate`` (chaos harness, ``core.faults.FaultPlan.edge_gate``)
+    is consulted before every attempt and raises ``InjectedPartition``
+    — a ``ConnectionRefusedError`` — so injected faults exercise these
+    exact retry paths."""
+
+    def __init__(self, base_url: str, timeout: float = 30.0,
+                 retry_attempts: int = RETRY_ATTEMPTS,
+                 retry_base: float = RETRY_BASE_S,
+                 retry_cap: float = RETRY_CAP_S,
+                 retry_seed: Optional[int] = None,
+                 fault_gate: Optional[Callable[[], None]] = None):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
         u = urllib.parse.urlsplit(self.base_url)
@@ -226,6 +258,32 @@ class HTTPClient(SuggestionClient):
         self._port = u.port or (443 if u.scheme == "https" else 80)
         self._prefix = u.path.rstrip("/")
         self._local = threading.local()
+        self.retry_attempts = max(1, retry_attempts)
+        self.retry_base = retry_base
+        self.retry_cap = retry_cap
+        self.fault_gate = fault_gate
+        self._rng = random.Random(retry_seed)
+        self._stats_lock = threading.Lock()
+        self.stats = {"retries": 0,      # re-sent requests (all causes)
+                      "backoffs": 0,     # retries that slept first
+                      "backoff_ms": 0.0,  # total time slept
+                      "refused": 0,      # connection-refused failures seen
+                      "gave_up": 0}      # requests failed after all attempts
+
+    def _backoff(self, attempt: int) -> None:
+        """Full-jitter sleep before retry ``attempt`` (0-based)."""
+        delay = self._rng.uniform(
+            0.0, min(self.retry_cap, self.retry_base * (2 ** attempt)))
+        with self._stats_lock:
+            self.stats["retries"] += 1
+            self.stats["backoffs"] += 1
+            self.stats["backoff_ms"] += delay * 1e3
+        if delay > 0.0:
+            time.sleep(delay)
+
+    def _count(self, key: str) -> None:
+        with self._stats_lock:
+            self.stats[key] += 1
 
     # ------------------------------------------------------------ transport
     def _conn(self) -> Tuple[http.client.HTTPConnection, bool]:
@@ -255,17 +313,30 @@ class HTTPClient(SuggestionClient):
         body = json.dumps(payload).encode() if payload is not None else None
         headers = {"Content-Type": "application/json"}
         url = self._prefix + path
+        attempt = 0                     # backoff retries consumed
         while True:
             conn, fresh = self._conn()
             try:
+                if self.fault_gate is not None:
+                    self.fault_gate()
                 conn.request(method, url, body=body, headers=headers)
             except (http.client.HTTPException, ConnectionError, OSError) as e:
-                # send-phase failure: the stale socket rejected the write,
-                # so the server never processed the request — safe to
+                # send-phase failure: the socket rejected the write, so
+                # the server never processed the request — safe to
                 # reconnect and retry even for non-idempotent verbs
                 self._drop_conn()
-                if fresh:
+                refused = isinstance(e, ConnectionRefusedError)
+                if refused:
+                    self._count("refused")
+                if not fresh:
+                    # stale keep-alive: free immediate retry, next is fresh
+                    self._count("retries")
+                    continue
+                if attempt + 1 >= self.retry_attempts:
+                    self._count("gave_up")
                     raise ApiError(E_INTERNAL, f"service unreachable: {e}")
+                self._backoff(attempt)
+                attempt += 1
                 continue
             try:
                 resp = conn.getresponse()
@@ -275,14 +346,22 @@ class HTTPClient(SuggestionClient):
                     self._drop_conn()
             except (http.client.HTTPException, ConnectionError, OSError) as e:
                 self._drop_conn()
-                if fresh or not idempotent:
+                if not idempotent:
                     # response-phase failure is ambiguous — the server may
                     # have committed the request.  Non-idempotent verbs
                     # (suggest) must not auto-retry here: a blind resend
                     # would leak pending budget — surface the error and
                     # let the caller decide
                     raise ApiError(E_INTERNAL, f"service unreachable: {e}")
-                continue                # stale keep-alive: retry once, fresh
+                if not fresh:
+                    self._count("retries")
+                    continue            # stale keep-alive: retry once, fresh
+                if attempt + 1 >= self.retry_attempts:
+                    self._count("gave_up")
+                    raise ApiError(E_INTERNAL, f"service unreachable: {e}")
+                self._backoff(attempt)
+                attempt += 1
+                continue
             if status >= 400:
                 try:
                     raise ApiError.from_json(json.loads(raw or b"{}"))
@@ -324,10 +403,18 @@ class HTTPClient(SuggestionClient):
                           {"suggestion_id": suggestion_id})
         return ReleaseResponse.from_json(resp).released
 
-    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+    def requeue(self, exp_id: str, suggestion_id: str,
+                assignment: Optional[dict] = None) -> bool:
         resp = self._call("POST", f"/v1/experiments/{exp_id}/requeue",
-                          {"suggestion_id": suggestion_id})
+                          {"suggestion_id": suggestion_id,
+                           "assignment": assignment})
         return bool(resp.get("requeued", False))
+
+    def drain(self, exp_id: str) -> DrainResponse:
+        """Quiesce the experiment on the serving shard ahead of a
+        handover (``POST .../drain``) — fleet rebalance control plane."""
+        return DrainResponse.from_json(
+            self._call("POST", f"/v1/experiments/{exp_id}/drain", {}))
 
     def load(self) -> dict:
         """Shard saturation snapshot (``GET /v1/load``) — consumed by the
@@ -335,8 +422,13 @@ class HTTPClient(SuggestionClient):
         return self._call("GET", "/v1/load")
 
     def status(self, exp_id: str) -> StatusResponse:
-        return StatusResponse.from_json(
+        resp = StatusResponse.from_json(
             self._call("GET", f"/v1/experiments/{exp_id}"))
+        # additive client-side view: this client's transport retry
+        # counters ride along so harnesses can assert retry behavior
+        with self._stats_lock:
+            resp.transport = dict(self.stats)
+        return resp
 
     def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
         return StatusResponse.from_json(

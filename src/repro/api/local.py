@@ -46,12 +46,14 @@ from repro.api.pipeline import (MissSlot, PrefetchItem, SuggestionPump,
                                 serve_misses)
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 CreateResponse, DECISION_STOP, Decision,
-                                E_UNKNOWN_EXPERIMENT, ObserveRequest,
-                                ObserveResponse, ReportRequest,
-                                StatusResponse, SuggestBatch, Suggestion)
+                                DrainResponse, E_FENCED,
+                                E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD,
+                                EPOCH_ZERO, ObserveRequest, ObserveResponse,
+                                ReportRequest, StatusResponse, SuggestBatch,
+                                Suggestion, epoch_tuple)
 from repro.core.experiment import ExperimentConfig
 from repro.core.space import strip_internal
-from repro.core.store import Store
+from repro.core.store import FencedError, Store
 from repro.core.suggest.base import (Observation, Optimizer, StoppingPolicy,
                                      make_optimizer, make_stopping_policy)
 
@@ -93,6 +95,12 @@ class _ExperimentState:
                       # SPARSE_MAX tuning signal, ROADMAP sparse quality)
                       "sparse_obs": 0, "sparse_regret": 0.0,
                       "exact_obs": 0, "exact_regret": 0.0}
+        # ownership fence (API.md §Fleet / Fencing): the epoch this
+        # incarnation adopted the experiment at; ``fenced`` flips once a
+        # newer incarnation's claim is detected and is terminal for this
+        # state object (a re-create re-claims and replaces it)
+        self.epoch = EPOCH_ZERO
+        self.fenced = False
         self.last_mirror = 0.0       # status.json mirror throttle
         self.appends = 0             # observes between log append + account
         self.append_cv = threading.Condition(self.lock)
@@ -132,11 +140,75 @@ def _public_best(best) -> Optional[Dict]:
     return d
 
 
+DRAINED_TOMBSTONES = 1024    # max remembered handed-over experiments
+
+
 class LocalClient(SuggestionClient):
     def __init__(self, store: Union[Store, str]):
         self.store = store if isinstance(store, Store) else Store(store)
         self._exps: Dict[str, _ExperimentState] = {}
         self._lock = threading.Lock()
+        # owner token: unique per service incarnation — the second half of
+        # the fence record (epoch orders ownership across grants; the
+        # token disambiguates incarnations within one epoch)
+        self.incarnation = f"svc-{uuid.uuid4().hex[:8]}"
+        # experiments drained off this shard (rebalance handover): answer
+        # wrong_shard — not unknown_experiment — so routed clients refresh
+        # the map instead of re-adopting here
+        self._drained: Dict[str, float] = {}
+
+    # -------------------------------------------------------------- fencing
+    def _tombstone(self, exp_id: str) -> None:
+        # holding self._lock
+        self._drained[exp_id] = time.time()
+        while len(self._drained) > DRAINED_TOMBSTONES:
+            self._drained.pop(next(iter(self._drained)))
+
+    def _claim_fence(self, exp_id: str, epoch) -> tuple:
+        """Adopt the experiment's fence record.  An explicit ``epoch`` is
+        a manager grant (claim exactly there — stale grants from a
+        deposed manager raise ``fenced``); without one, an *existing*
+        record is re-claimed at its current epoch (owner swap: last
+        adopter within an epoch wins), and an absent record is left
+        absent — standalone services never enter the fencing regime."""
+        try:
+            if epoch is not None:
+                return self.store.claim_fence(exp_id, epoch_tuple(epoch),
+                                              self.incarnation)
+            cur, owner = self.store.read_fence(exp_id)
+            if cur == EPOCH_ZERO and not owner:
+                return EPOCH_ZERO
+            return self.store.claim_fence(exp_id, cur, self.incarnation)
+        except FencedError as e:
+            raise ApiError(E_FENCED, str(e))
+
+    def _check_fence(self, exp_id: str, state: _ExperimentState) -> None:
+        """Write guard: every durable write re-validates ownership (one
+        cached os.stat).  On a lost fence the incarnation stands down —
+        pump stopped, parked misses unblocked, all further calls
+        answered ``fenced`` — and the write is rejected *before* it
+        reaches the log."""
+        if state.fenced:
+            raise ApiError(E_FENCED,
+                           f"{exp_id}: this incarnation was fenced")
+        try:
+            self.store.check_fence(exp_id, state.epoch, self.incarnation)
+        except FencedError as e:
+            self._stand_down(state)
+            raise ApiError(E_FENCED, str(e))
+
+    def _stand_down(self, state: _ExperimentState) -> None:
+        with state.lock:
+            if state.fenced:
+                return
+            state.fenced = True
+            pump = state.pump
+            slots, state.miss_slots = state.miss_slots, []
+            for sl in slots:
+                sl.done = True
+                sl.event.set()
+        if pump is not None:
+            pump.stop(join=False)   # no join: may be called from any path
 
     # ------------------------------------------------------------ lifecycle
     def create_experiment(self, req: CreateExperiment) -> CreateResponse:
@@ -169,6 +241,11 @@ class LocalClient(SuggestionClient):
                     exp_id = new_experiment_id()
                 if not on_disk:
                     self.store.create_experiment(exp_id, cfg)
+            # (re-)adopting clears the handover tombstone: this shard is
+            # being told to serve the experiment again
+            if exp_id is not None:
+                self._drained.pop(exp_id, None)
+            if fresh:
                 optimizer = make_optimizer(cfg.optimizer, cfg.space,
                                            seed=cfg.seed,
                                            **cfg.optimizer_options)
@@ -191,6 +268,17 @@ class LocalClient(SuggestionClient):
             state.opt_lock.acquire()
             state.lock.acquire()
         try:
+            # claim ownership BEFORE any durable write below: a zombie
+            # acting on a deposed manager's grant must fail the whole
+            # create, not half-adopt
+            try:
+                state.epoch = self._claim_fence(exp_id, req.epoch)
+            except ApiError:
+                if fresh:
+                    with self._lock:
+                        self._exps.pop(exp_id, None)
+                raise
+            state.fenced = False
             resumed = on_disk or state.observed > 0
             state.cfg = cfg          # resume may raise the budget
             state.stopped = False    # re-creating declares intent to run
@@ -207,11 +295,17 @@ class LocalClient(SuggestionClient):
             while state.appends and time.monotonic() < deadline:
                 state.append_cv.wait(0.1)
             drain_ops(state)
-            prior = self.store.load_observations(exp_id)
+            records = self.store.load_observation_records(exp_id)
+            prior = [Observation.from_json(r) for r in records]
             # restore() is idempotent: only the log tail beyond what the
             # optimizer has already absorbed is replayed
             state.optimizer.restore(
                 {"history": [o.to_json() for o in prior]})
+            # rebuild the duplicate-observe dedupe set from the log: an
+            # adopting incarnation must reject a straggler's re-observe
+            # of a suggestion the previous owner already logged
+            state.closed.update(r["suggestion_id"] for r in records
+                                if r.get("suggestion_id"))
             state.observed = len(prior)
             state.failures = sum(1 for o in prior if o.failed)
             ok = [o for o in prior if not o.failed and o.value is not None]
@@ -270,7 +364,12 @@ class LocalClient(SuggestionClient):
     def _state(self, exp_id: str) -> _ExperimentState:
         with self._lock:
             state = self._exps.get(exp_id)
+            drained = state is None and exp_id in self._drained
         if state is None:
+            if drained:
+                raise ApiError(E_WRONG_SHARD,
+                               f"experiment {exp_id!r} was handed over "
+                               f"(drained from this shard)")
             raise ApiError(E_UNKNOWN_EXPERIMENT,
                            f"no live experiment {exp_id!r}")
         return state
@@ -335,6 +434,12 @@ class LocalClient(SuggestionClient):
     # ------------------------------------------------------ suggest/observe
     def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
         state = self._state(exp_id)
+        if state.fenced:
+            # cheap flag check only — serving from a not-yet-detected
+            # zombie is harmless (its observes are fenced at the log),
+            # so the µs hot path pays no stat() here
+            raise ApiError(E_FENCED,
+                           f"{exp_id}: this incarnation was fenced")
         self._ensure_pump(exp_id, state)
         with state.lock:
             if state.stopped:
@@ -375,6 +480,9 @@ class LocalClient(SuggestionClient):
 
     def observe(self, req: ObserveRequest) -> ObserveResponse:
         state = self._state(req.exp_id)
+        # ownership guard BEFORE any bookkeeping: a fenced incarnation's
+        # observation must neither close the suggestion nor reach the log
+        self._check_fence(req.exp_id, state)
         obs = Observation(req.assignment, req.value, req.stddev,
                           req.failed, dict(req.metadata))
         with state.lock:
@@ -406,7 +514,8 @@ class LocalClient(SuggestionClient):
         # resume (create_experiment) can quiesce in-flight observes
         # before deriving counters from the log.
         try:
-            self.store.append_observation(req.exp_id, obs, req.trial_id)
+            self.store.append_observation(req.exp_id, obs, req.trial_id,
+                                          suggestion_id=req.suggestion_id)
         except BaseException:
             with state.lock:
                 state.appends -= 1
@@ -486,6 +595,7 @@ class LocalClient(SuggestionClient):
         policy, and answer continue/stop/pause.  Single-writer under the
         experiment lock — N schedulers prune against ONE rung table."""
         state = self._state(req.exp_id)
+        self._check_fence(req.exp_id, state)   # report appends durably
         with state.lock:
             if state.stopped:
                 # deleted/stopped experiments wind their trials down via
@@ -531,16 +641,28 @@ class LocalClient(SuggestionClient):
                 self._drain_sync(state)
         return s is not None
 
-    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+    def requeue(self, exp_id: str, suggestion_id: str,
+                assignment: Optional[Dict] = None) -> bool:
         """Dead-worker recovery (fleet event loop): park a *pending*
         suggestion for re-serving.  Unlike ``release`` the suggestion
         keeps its id and its constant-liar lie — the next ``suggest``
         hands it (exactly once) to a surviving worker, so the optimizer
         sees no retraction and the observation, whoever produces it,
-        dedupes by the same suggestion_id."""
+        dedupes by the same suggestion_id.
+
+        With ``assignment`` this is the *transfer* form (rebalance
+        handover): a suggestion id minted by the previous owner is
+        installed here as a parked pending under the same id, so the
+        in-flight trial's eventual observation still lands exactly
+        once."""
         state = self._state(exp_id)
         with state.lock:
             s = state.pending.get(suggestion_id)
+            if (s is None and assignment is not None
+                    and suggestion_id not in state.closed
+                    and not state.stopped):
+                s = Suggestion(suggestion_id, assignment)
+                state.pending[suggestion_id] = s
             if s is None or suggestion_id in state.closed or state.stopped:
                 return False
             if all(o.suggestion_id != suggestion_id
@@ -548,6 +670,43 @@ class LocalClient(SuggestionClient):
                 state.orphaned.append(s)
                 state.stats["requeued"] += 1
             return True
+
+    def drain(self, exp_id: str) -> DrainResponse:
+        """Quiesce + hand over one experiment (rebalance control plane):
+        stop its pump, fold deferred observations, retire the
+        speculative queue, drop the live state, and answer with the
+        still-pending suggestions so the manager can transfer them to
+        the new owner.  Leaves a tombstone so later routed calls get
+        ``wrong_shard`` (refresh your map), not ``unknown_experiment``
+        (which would invite clients to re-adopt here).  Idempotent."""
+        with self._lock:
+            state = self._exps.get(exp_id)
+            if state is None:
+                self._tombstone(exp_id)
+                return DrainResponse(drained=False, pending=[],
+                                     observations=0)
+        with state.lock:
+            pump = state.pump
+        if pump is not None:
+            pump.stop(join=True)    # no speculation past the handover
+        with state.opt_lock:
+            drain_ops(state)        # folds are real data — keep them
+            retire_queue(state)     # flush speculative constant-liar lies
+            with state.lock:
+                pending = sorted(
+                    (s for s in state.pending.values()
+                     if s.suggestion_id not in state.closed),
+                    key=lambda s: s.suggestion_id)
+                slots, state.miss_slots = state.miss_slots, []
+                for sl in slots:
+                    sl.done = True
+                    sl.event.set()
+                observed = state.observed
+        with self._lock:
+            self._exps.pop(exp_id, None)
+            self._tombstone(exp_id)
+        return DrainResponse(drained=True, pending=pending,
+                             observations=observed)
 
     def load(self) -> Dict:
         """Shard-level load summary — the fleet's admission-control
@@ -622,7 +781,9 @@ class LocalClient(SuggestionClient):
                 observations=state.observed, failures=state.failures,
                 pending=len(state.pending),
                 best=_public_best(state.best),
-                prefetched=len(state.queue), pump=pump_stats)
+                prefetched=len(state.queue), pump=pump_stats,
+                epoch=(list(state.epoch)
+                       if state.epoch != EPOCH_ZERO else None))
 
     def _status_from_store(self, exp_id: str) -> StatusResponse:
         """Cold path: experiment not live in this process — answer from
@@ -645,6 +806,9 @@ class LocalClient(SuggestionClient):
         with self._lock:
             exp = self._exps.get(exp_id)
         if exp is not None:
+            # stop writes a terminal status — fenced incarnations don't
+            # get to flip a handed-over experiment's durable state
+            self._check_fence(exp_id, exp)
             with exp.lock:
                 exp.stopped = True
                 pump = exp.pump

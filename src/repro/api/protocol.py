@@ -39,10 +39,34 @@ E_EXPERIMENT_EXISTS = "experiment_exists"    # 409
 E_INTERNAL = "internal"                      # 500
 E_FLEET_BUSY = "fleet_busy"                  # 503: every shard saturated
 E_WRONG_SHARD = "wrong_shard"                # 421: routed past a map change
+E_FENCED = "fenced"                          # 409: write carried a stale epoch
 
 _HTTP_STATUS = {E_BAD_REQUEST: 400, E_UNKNOWN_EXPERIMENT: 404,
                 E_UNKNOWN_SUGGESTION: 404, E_EXPERIMENT_EXISTS: 409,
-                E_INTERNAL: 500, E_FLEET_BUSY: 503, E_WRONG_SHARD: 421}
+                E_INTERNAL: 500, E_FLEET_BUSY: 503, E_WRONG_SHARD: 421,
+                E_FENCED: 409}
+
+
+# ------------------------------------------------------------------ epochs
+# An ownership epoch is a ``[term, seq]`` pair compared lexicographically:
+# ``term`` is the fleet manager's leadership term (bumped on every
+# takeover, so a deposed manager's grants always lose) and ``seq`` is the
+# manager's monotonically bumped grant counter (derived from the ShardMap
+# version stream, so within one term a later handover always wins).  A
+# standalone service runs at term 0.  See API.md §Fleet / Fencing.
+EPOCH_ZERO = (0, 0)
+
+
+def epoch_tuple(v) -> tuple:
+    """Normalize a wire/storage epoch (2-list, tuple or None) to a
+    comparable ``(term, seq)`` tuple of ints."""
+    if v is None:
+        return EPOCH_ZERO
+    try:
+        term, seq = v
+        return (int(term), int(seq))
+    except (TypeError, ValueError):
+        raise ApiError(E_BAD_REQUEST, f"malformed epoch {v!r}")
 
 
 class ApiError(Exception):
@@ -74,19 +98,31 @@ class CreateExperiment:
     ``config`` may be empty *only* together with an ``exp_id``: the
     service then resumes the experiment from its stored config — the
     fleet failover path (a new owner shard adopts an experiment it has
-    never seen, out of the shared system-of-record store)."""
+    never seen, out of the shared system-of-record store).
+
+    ``epoch`` is the manager-granted ownership epoch (``[term, seq]``,
+    see module epoch helpers).  When present the adopting shard *claims*
+    the experiment's fence record at that epoch, fencing every older
+    incarnation; when absent the shard adopts at the stored epoch
+    (standalone / same-map resume)."""
     config: Dict[str, Any]                  # ExperimentConfig.to_json()
     exp_id: Optional[str] = None
+    epoch: Optional[List[int]] = None
 
     def to_json(self) -> Dict[str, Any]:
         return {"version": PROTOCOL_VERSION, "config": self.config,
-                "exp_id": self.exp_id}
+                "exp_id": self.exp_id,
+                "epoch": list(self.epoch) if self.epoch else None}
 
     @classmethod
     def from_json(cls, d: Dict[str, Any]) -> "CreateExperiment":
         if not d.get("config") and not d.get("exp_id"):
             raise ApiError(E_BAD_REQUEST, "create requires 'config'")
-        return cls(config=d.get("config") or {}, exp_id=d.get("exp_id"))
+        epoch = d.get("epoch")
+        if epoch is not None:
+            epoch = list(epoch_tuple(epoch))
+        return cls(config=d.get("config") or {}, exp_id=d.get("exp_id"),
+                   epoch=epoch)
 
 
 @dataclass
@@ -327,7 +363,13 @@ class StatusResponse:
     plus, for live experiments, the optimizer's ``refit`` schedule and
     the shared fit executor's ``executor`` counters, API.md §Posterior
     approximation & refit scheduling) or ``None`` for a non-live
-    experiment."""
+    experiment.
+
+    ``epoch`` is the serving shard's ownership epoch for the experiment
+    (``[term, seq]``, additive v1 field); ``transport`` carries the
+    *client-side* HTTP retry/backoff counters (filled in by
+    ``HTTPClient.status``, never sent by the service — additive v1
+    field, API.md §Errors / Retries)."""
     exp_id: str
     state: str = "pending"
     name: str = ""
@@ -338,21 +380,26 @@ class StatusResponse:
     best: Optional[Dict[str, Any]] = None   # Observation.to_json()
     prefetched: int = 0
     pump: Optional[Dict[str, Any]] = None
+    epoch: Optional[List[int]] = None
+    transport: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
         return {"exp_id": self.exp_id, "state": self.state, "name": self.name,
                 "budget": self.budget, "observations": self.observations,
                 "failures": self.failures, "pending": self.pending,
                 "best": self.best, "prefetched": self.prefetched,
-                "pump": self.pump}
+                "pump": self.pump,
+                "epoch": list(self.epoch) if self.epoch else None}
 
     @classmethod
     def from_json(cls, d) -> "StatusResponse":
+        epoch = d.get("epoch")
         return cls(d.get("exp_id", ""), d.get("state", "pending"),
                    d.get("name", ""), d.get("budget", 0),
                    d.get("observations", 0), d.get("failures", 0),
                    d.get("pending", 0), d.get("best"),
-                   d.get("prefetched", 0), d.get("pump"))
+                   d.get("prefetched", 0), d.get("pump"),
+                   list(epoch_tuple(epoch)) if epoch else None)
 
 
 @dataclass
@@ -404,18 +451,61 @@ class RequeueRequest:
     """Hand a *pending* suggestion back to the serving queue (dead-worker
     recovery): the suggestion keeps its id and its constant-liar lie, and
     the next ``suggest`` on this experiment serves it — exactly once —
-    before any fresh speculation."""
+    before any fresh speculation.
+
+    ``assignment`` is the *transfer* form (rebalance handover): when the
+    suggestion id is unknown to the receiving shard — it was minted by the
+    previous owner — the assignment lets the new owner install it as a
+    parked pending under the same id instead of rejecting it."""
     exp_id: str
     suggestion_id: str
+    assignment: Optional[Dict[str, Any]] = None
 
     def to_json(self) -> Dict[str, Any]:
-        return {"exp_id": self.exp_id, "suggestion_id": self.suggestion_id}
+        return {"exp_id": self.exp_id, "suggestion_id": self.suggestion_id,
+                "assignment": self.assignment}
 
     @classmethod
     def from_json(cls, d) -> "RequeueRequest":
         if "suggestion_id" not in d:
             raise ApiError(E_BAD_REQUEST, "requeue requires 'suggestion_id'")
-        return cls(d.get("exp_id", ""), d["suggestion_id"])
+        return cls(d.get("exp_id", ""), d["suggestion_id"],
+                   d.get("assignment"))
+
+
+@dataclass
+class DrainRequest:
+    """Quiesce one experiment on its current owner ahead of a handover:
+    stop the prefetch pump, retire the speculative queue, park the pending
+    set, and answer with the parked suggestions so the manager can
+    transfer them to the new owner.  Idempotent; a drained experiment
+    answers ``wrong_shard`` to later data-plane calls so clients re-route."""
+    exp_id: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"exp_id": self.exp_id}
+
+    @classmethod
+    def from_json(cls, d) -> "DrainRequest":
+        return cls(d.get("exp_id", ""))
+
+
+@dataclass
+class DrainResponse:
+    drained: bool = False
+    pending: List[Suggestion] = field(default_factory=list)
+    observations: int = 0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"drained": self.drained,
+                "pending": [s.to_json() for s in self.pending],
+                "observations": self.observations}
+
+    @classmethod
+    def from_json(cls, d) -> "DrainResponse":
+        return cls(d.get("drained", False),
+                   [Suggestion.from_json(s) for s in d.get("pending", [])],
+                   d.get("observations", 0))
 
 
 @dataclass

@@ -4,13 +4,28 @@ The scheduler already implements the recovery policies (retry, requeue on
 preemption, speculative re-execution); this module provides deterministic
 fault *injection* so those paths are testable without real node failures —
 the same role chaos testing plays for the paper's Kubernetes deployment.
+
+Two layers:
+
+* trial-level (:func:`wrap_trial`, :class:`FaultPolicy`) — crash / NaN /
+  straggler injection keyed by assignment hash;
+* fleet-level (:class:`FaultPlan`) — a deterministic, tick-indexed
+  schedule of *edge* faults (partition / drop / delay between named
+  endpoints: ``worker-3 ↔ shard-1``, ``manager ↔ shard-0``), threaded
+  through ``HTTPClient`` (``fault_gate=``), ``FleetClient``
+  (``fault_plan=``) and the manager probe loop.  Injected partitions
+  raise :class:`InjectedPartition` — a ``ConnectionRefusedError``
+  subclass — so they traverse the *real* transport error-handling and
+  retry paths, replacing wall-clock kill −9 races with reproducible
+  partition schedules.
 """
 from __future__ import annotations
 
+import fnmatch
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -19,6 +34,115 @@ from repro.core.cluster import Cluster
 
 class InjectedCrash(RuntimeError):
     pass
+
+
+class InjectedPartition(ConnectionRefusedError):
+    """A fault-plan edge fault.  Subclasses ``ConnectionRefusedError`` so
+    transport code treats an injected partition exactly like a refused
+    connect (the message provably never reached the far side — safe to
+    retry any verb)."""
+
+
+class FaultPlan:
+    """Deterministic, tick-indexed schedule of fleet edge faults.
+
+    A rule is ``{op, src, dst, at, until, delay_s, p}``:
+
+      op       ``partition`` (raise on every message), ``drop`` (raise
+               with probability ``p``, seeded) or ``delay`` (sleep
+               ``delay_s`` then pass).
+      src/dst  endpoint labels; ``fnmatch`` patterns (``"*"``, ``"w*"``)
+               are allowed and the rule matches either direction of the
+               edge.
+      at       first tick (inclusive) the rule is active.
+      until    last tick (exclusive); ``None`` = until healed/forever.
+
+    Ticks are a *logical* clock: the active FleetManager advances the
+    plan once per probe tick (and tests drive :meth:`tick` directly), so
+    a schedule replays identically regardless of wall-clock timing.
+    Helpers (:meth:`partition`, :meth:`heal`) edit the schedule live —
+    handy for test scripts that interleave faults with assertions.
+    """
+
+    def __init__(self, rules: Optional[List[Dict[str, Any]]] = None,
+                 seed: int = 0):
+        self._lock = threading.Lock()
+        self.rules: List[Dict[str, Any]] = [dict(r) for r in (rules or [])]
+        self.rng = np.random.default_rng(seed)
+        self._tick = 0
+        # observability: (src, dst) -> count of messages faulted
+        self.dropped: Dict[Tuple[str, str], int] = {}
+        self.delayed: Dict[Tuple[str, str], int] = {}
+
+    # ------------------------------------------------------------- schedule
+    def add(self, op: str, src: str, dst: str, at: int = 0,
+            until: Optional[int] = None, delay_s: float = 0.0,
+            p: float = 1.0) -> "FaultPlan":
+        with self._lock:
+            self.rules.append({"op": op, "src": src, "dst": dst, "at": at,
+                               "until": until, "delay_s": delay_s, "p": p})
+        return self
+
+    def partition(self, src: str, dst: str, at: int = 0,
+                  until: Optional[int] = None) -> "FaultPlan":
+        return self.add("partition", src, dst, at=at, until=until)
+
+    def heal(self, src: str = "*", dst: str = "*") -> "FaultPlan":
+        """End every open-ended rule matching the edge at the current
+        tick (rules with an explicit ``until`` keep their schedule)."""
+        with self._lock:
+            for r in self.rules:
+                if (r["until"] is None
+                        and self._edge_match(r, src, dst)):
+                    r["until"] = self._tick
+        return self
+
+    # ------------------------------------------------------------- clock
+    def tick(self) -> int:
+        with self._lock:
+            self._tick += 1
+            return self._tick
+
+    @property
+    def now(self) -> int:
+        return self._tick
+
+    # ------------------------------------------------------------- gating
+    @staticmethod
+    def _edge_match(rule: Dict[str, Any], src: str, dst: str) -> bool:
+        m = fnmatch.fnmatch
+        return ((m(src, rule["src"]) and m(dst, rule["dst"]))
+                or (m(src, rule["dst"]) and m(dst, rule["src"])))
+
+    def gate(self, src: str, dst: str) -> None:
+        """Consult the plan for one message on edge ``src -> dst``: raise
+        :class:`InjectedPartition` (partition, or seeded drop) or sleep
+        (delay) per the rules active at the current tick."""
+        with self._lock:
+            tick = self._tick
+            active = [r for r in self.rules
+                      if r["at"] <= tick
+                      and (r["until"] is None or tick < r["until"])
+                      and self._edge_match(r, src, dst)]
+            delay = 0.0
+            for r in active:
+                if r["op"] == "partition" or (
+                        r["op"] == "drop"
+                        and self.rng.uniform() < r.get("p", 1.0)):
+                    self.dropped[(src, dst)] = \
+                        self.dropped.get((src, dst), 0) + 1
+                    raise InjectedPartition(
+                        f"injected partition {src} -> {dst} @tick {tick}")
+                if r["op"] == "delay":
+                    delay = max(delay, r.get("delay_s", 0.0))
+        if delay > 0.0:
+            self.delayed[(src, dst)] = self.delayed.get((src, dst), 0) + 1
+            time.sleep(delay)
+
+    def edge_gate(self, src: str, dst: str) -> Callable[[], None]:
+        """Zero-arg closure for transports that only know their own edge
+        (``HTTPClient(fault_gate=...)``)."""
+        return lambda: self.gate(src, dst)
 
 
 @dataclass

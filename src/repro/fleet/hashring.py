@@ -76,6 +76,18 @@ class HashRing:
             idx = 0
         return self._owner[self._ring[idx]]
 
+    def moved_by_adding(self, node: str, keys) -> List[str]:
+        """The minimal disruption set: the keys whose ownership would
+        move if ``node`` joined the ring.  Consistent hashing guarantees
+        a key only ever moves *to* the new node — everyone else's routes
+        are untouched — so this is exactly the set a rebalance-on-add
+        must hand over.  Non-destructive (simulates the add)."""
+        if node in self._nodes or not self._ring:
+            return []
+        after = HashRing(nodes=list(self._nodes) + [node],
+                         replicas=self.replicas)
+        return [k for k in keys if after.owner(k) != self.owner(k)]
+
     def spread(self, keys) -> Dict[str, int]:
         """keys-per-node histogram (balance diagnostics/tests)."""
         out: Dict[str, int] = {n: 0 for n in self._nodes}

@@ -26,21 +26,24 @@ dies, the manager requeues exactly those so survivors pick them up.
 from __future__ import annotations
 
 import threading
+import time
 import uuid
-from typing import Dict, Optional, Set, Union
+from typing import Dict, List, Optional, Set, Union
 
 from repro.api.client import SuggestionClient
 from repro.api.http import HTTPClient
 from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
-                                CreateResponse, Decision, E_INTERNAL,
-                                E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD,
-                                HeartbeatRequest, HeartbeatResponse,
-                                ObserveRequest, ObserveResponse,
-                                ReportRequest, ShardMap, StatusResponse,
-                                SuggestBatch)
+                                CreateResponse, Decision, E_FENCED,
+                                E_INTERNAL, E_UNKNOWN_EXPERIMENT,
+                                E_WRONG_SHARD, HeartbeatRequest,
+                                HeartbeatResponse, ObserveRequest,
+                                ObserveResponse, ReportRequest, ShardMap,
+                                StatusResponse, SuggestBatch)
 from repro.fleet.hashring import HashRing
 
-_RETRYABLE = (E_INTERNAL, E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD)
+# ``fenced`` is retryable from the client's seat: the answering shard
+# lost ownership, so a map refresh + re-route reaches the new owner
+_RETRYABLE = (E_INTERNAL, E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD, E_FENCED)
 
 
 class _InprocFleet:
@@ -134,12 +137,19 @@ class FleetClient(SuggestionClient):
 
     def __init__(self, fleet, worker_id: Optional[str] = None,
                  heartbeat: bool = True, timeout: float = 30.0,
-                 replicas: int = 64):
+                 replicas: int = 64, fault_plan=None):
         if isinstance(fleet, str):
             self._proxy = _HttpFleet(fleet, timeout=timeout)
         else:
             self._proxy = _InprocFleet(fleet)
         self.worker_id = worker_id or f"sched-{uuid.uuid4().hex[:8]}"
+        # chaos harness: a ``core.faults.FaultPlan`` consulted per routed
+        # call (edge worker_id -> shard_id) and per heartbeat (-> manager)
+        self._fault_plan = fault_plan
+        # audit trail (bounded): heartbeat failures are recorded here
+        # with a dedupe counter instead of being swallowed silently
+        self.events: List[dict] = []
+        self._beat_errors: Dict[str, int] = {}
         self._map = ShardMap(version=-1)
         self._ring = HashRing(replicas=replicas)
         self._replicas = replicas
@@ -205,6 +215,13 @@ class FleetClient(SuggestionClient):
         with self._lock:
             sid = self._owner(exp_id)
             url = self._map.shards.get(sid, "")
+        if self._fault_plan is not None:
+            try:
+                self._fault_plan.gate(self.worker_id, sid)
+            except ConnectionRefusedError as e:
+                # surface like a real transport failure so the routed
+                # retry/refresh machinery handles injected partitions
+                raise ApiError(E_INTERNAL, f"service unreachable: {e}")
         return self._proxy.shard_client(sid, url)
 
     # ----------------------------------------------------------- routing
@@ -216,6 +233,13 @@ class FleetClient(SuggestionClient):
         except ApiError as e:
             if e.code not in _RETRYABLE:
                 raise
+            if e.code in (E_WRONG_SHARD, E_FENCED):
+                # the answering shard disowned the experiment (drained or
+                # fenced): the cached assignment is provably stale — drop
+                # it so re-homing follows the ring/overrides, not the old
+                # owner (re-creating there would resurrect a zombie)
+                with self._lock:
+                    self._assigned.pop(exp_id, None)
         self._refresh_map(force=True)
         self._rehome(exp_id)
         return fn(self._client_for(exp_id))
@@ -271,9 +295,11 @@ class FleetClient(SuggestionClient):
         self._drop_holding(exp_id, suggestion_id)
         return ok
 
-    def requeue(self, exp_id: str, suggestion_id: str) -> bool:
+    def requeue(self, exp_id: str, suggestion_id: str,
+                assignment: Optional[dict] = None) -> bool:
         ok = self._routed(exp_id,
-                          lambda c: c.requeue(exp_id, suggestion_id))
+                          lambda c: c.requeue(exp_id, suggestion_id,
+                                              assignment=assignment))
         self._drop_holding(exp_id, suggestion_id)
         return ok
 
@@ -305,6 +331,8 @@ class FleetClient(SuggestionClient):
     def beat(self) -> HeartbeatResponse:
         """Send one heartbeat now (the daemon thread calls this on its
         own; tests call it to drive liveness deterministically)."""
+        if self._fault_plan is not None:
+            self._fault_plan.gate(self.worker_id, "manager")
         with self._lock:
             self._seq += 1
             req = HeartbeatRequest(worker_id=self.worker_id,
@@ -325,15 +353,39 @@ class FleetClient(SuggestionClient):
                 return
             try:
                 self.beat()
-            except Exception:
-                # manager briefly unreachable — keep beating; the
-                # registry's auto-register tolerates manager restarts
-                pass
+            except Exception as e:
+                # manager briefly unreachable — keep beating (the
+                # registry's auto-register tolerates manager restarts),
+                # but never silently: the audit trail records it
+                self._audit_beat_error(e)
 
-    def close(self) -> None:
+    def _audit_beat_error(self, e: BaseException) -> None:
+        """Record a heartbeat failure with bounded dedupe: the first
+        occurrence and every 32nd repeat land in ``events``; the rest
+        only bump the per-error counter."""
+        key = f"{type(e).__name__}: {e}"
+        with self._lock:
+            n = self._beat_errors.get(key, 0) + 1
+            if len(self._beat_errors) >= 32 and key not in self._beat_errors:
+                self._beat_errors.pop(next(iter(self._beat_errors)))
+            self._beat_errors[key] = n
+            if n == 1 or n % 32 == 0:
+                self.events.append({"event": "beat_error", "error": key,
+                                    "count": n, "time": time.time()})
+                if len(self.events) > 128:
+                    del self.events[:64]
+
+    def beat_errors(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._beat_errors)
+
+    def close(self, join_timeout: float = 5.0) -> None:
+        """Stop the heartbeat thread (joined with a timeout — a beat hung
+        in a dead transport must not block interpreter exit) and release
+        shard connections."""
         self._stop.set()
         self._wake.set()
         if self._hb_thread is not None:
-            self._hb_thread.join(timeout=5)
+            self._hb_thread.join(timeout=join_timeout)
             self._hb_thread = None
         self._proxy.close()

@@ -7,7 +7,13 @@ Endpoint map (schemas in API.md §Fleet):
   GET  /fleet/map           versioned ShardMap (routing table)
   POST /fleet/heartbeat     worker liveness beat -> {state, map_version,
                             period}
-  GET  /fleet/status        manager status (shards, workers, stats)
+  POST /fleet/shards        attach a running ``serve-api`` shard at
+                            runtime ({url, shard_id?, rebalance?}); the
+                            manager rebalances the minimal disruption
+                            set onto it (drain → adopt at a bumped
+                            epoch → transfer)
+  GET  /fleet/status        manager status (shards, workers, stats,
+                            role/term)
   GET  /fleet/healthz       manager liveness
 
 ``serve_fleet`` assembles the whole thing: a FleetManager over N
@@ -80,6 +86,16 @@ class _FleetHandler(BaseHTTPRequestHandler):
         if method == "POST" and path == "/fleet/heartbeat":
             req = HeartbeatRequest.from_json(self._read_body())
             return m.heartbeat(req).to_json()
+        if method == "POST" and path == "/fleet/shards":
+            body = self._read_body()
+            url = (body.get("url") or "").strip()
+            if not url:
+                raise ApiError(E_BAD_REQUEST, "shard url required")
+            handle = m.add_shard(url, shard_id=body.get("shard_id"),
+                                 rebalance=bool(body.get("rebalance", True)))
+            out = handle.to_json()
+            out["map_version"] = m.shard_map().version
+            return out
         if method == "POST" and path == "/fleet/experiments":
             req = CreateExperiment.from_json(self._read_body())
             resp, shard_id, url, version = m.create_experiment(req)
@@ -153,9 +169,18 @@ def serve_fleet(store: Union[Store, str, None] = None, shards: int = 0,
     one shard is required."""
     if shards > 0 and store is None:
         raise ValueError("in-process shards need a store root")
-    if shards <= 0 and not shard_urls:
+    standby = bool(manager_kwargs.get("standby"))
+    if shards <= 0 and not shard_urls and not standby:
+        # a warm standby may start empty — it inherits the fleet from
+        # the control snapshot at takeover
         raise ValueError("a fleet needs at least one shard "
                          "(shards=N or shard_urls=[...])")
+    if standby and store is None:
+        raise ValueError("a standby manager needs the shared store root")
+    # the shared store doubles as the manager's control plane (leader
+    # lease, snapshot, event tail, rebalance journal) — that is what
+    # makes a warm standby and crash-safe rebalance possible
+    manager_kwargs.setdefault("store", store)
     manager = FleetManager(period=period, **manager_kwargs)
     owned: List[ApiServer] = []
     for i in range(shards):

@@ -113,6 +113,11 @@ def main(argv=None) -> int:
                               "(repeatable)")
     p_fleet.add_argument("--period", type=float, default=1.0,
                          help="heartbeat period in seconds")
+    p_fleet.add_argument("--standby", action="store_true",
+                         help="start as a warm standby: watch the active "
+                              "manager's lease in the shared store and "
+                              "take over (with a bumped leadership term) "
+                              "when it goes stale")
 
     p_status = sub.add_parser("status")
     p_status.add_argument("experiment_id")
@@ -172,7 +177,8 @@ def main(argv=None) -> int:
             server = serve_fleet(orch.store, shards=args.shards,
                                  shard_urls=args.shard_urls,
                                  host=args.host, port=args.port,
-                                 period=args.period)
+                                 period=args.period,
+                                 standby=args.standby)
         except (OSError, ValueError) as e:
             print(f"cannot start fleet: {e}", file=sys.stderr)
             return 1

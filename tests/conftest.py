@@ -12,3 +12,6 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "contention: multi-client service stress test (skipped "
         "unless REPRO_CONTENTION=1; run by scripts/ci.sh tier-2)")
+    config.addinivalue_line(
+        "markers", "chaos: deterministic fault-injection fleet test "
+        "(skipped unless REPRO_CHAOS=1; run by scripts/ci.sh tier-2)")

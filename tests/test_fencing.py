@@ -1,0 +1,496 @@
+"""Partition tolerance: epoch fencing, rebalance-on-add, manager
+standby/failover, and the deterministic chaos harness.
+
+The fencing invariants under test (ISSUE 7 acceptance):
+  * every observation lands in the log exactly once, across any
+    interleaving of partitions, heals, and ownership handovers;
+  * no suggestion id is served twice;
+  * a fenced incarnation's writes NEVER reach the store.
+
+The chaos tests (marked ``chaos``) replay a seeded, tick-indexed
+``FaultPlan`` through the real client/manager transport paths — run by
+scripts/ci.sh tier-2 with ``REPRO_CHAOS=1``.
+"""
+import os
+import tempfile
+import time
+
+import pytest
+
+from repro.api.local import LocalClient
+from repro.api.protocol import (ApiError, CreateExperiment, E_FENCED,
+                                E_WRONG_SHARD, ObserveRequest)
+from repro.core import ExperimentConfig, Param, Space
+from repro.core.faults import FaultPlan, InjectedPartition
+from repro.core.store import EPOCH_ZERO, FencedError, Store
+from repro.fleet import FleetClient, FleetManager
+
+
+def chaos(fn):
+    return pytest.mark.chaos(pytest.mark.skipif(
+        not os.environ.get("REPRO_CHAOS"),
+        reason="chaos fault injection (tier-2; set REPRO_CHAOS=1)")(fn))
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg_json(name, budget=6, **kw):
+    kw.setdefault("optimizer", "random")
+    kw.setdefault("space", _space())
+    return dict(ExperimentConfig(name=name, budget=budget, **kw).to_json())
+
+
+# ------------------------------------------------------------ store fences
+def test_store_fence_claim_check_and_optin_semantics():
+    store = Store(tempfile.mkdtemp())
+    store.create_experiment("e1", ExperimentConfig(
+        name="f", budget=2, optimizer="random", space=_space()))
+    # no fence record: reads as zero, every check passes (standalone
+    # clients never opt into the fencing regime)
+    assert store.read_fence("e1") == (EPOCH_ZERO, "")
+    store.check_fence("e1", EPOCH_ZERO, "svc-any")
+    # first grant claims the record
+    assert store.claim_fence("e1", (1, 1), "svc-a") == (1, 1)
+    store.check_fence("e1", (1, 1), "svc-a")
+    # within an epoch: last adopter wins (owner swap), old owner fenced
+    store.claim_fence("e1", (1, 1), "svc-b")
+    with pytest.raises(FencedError):
+        store.check_fence("e1", (1, 1), "svc-a")
+    # across epochs: higher grant always wins; stale claim rejected
+    store.claim_fence("e1", (2, 5), "svc-c")
+    with pytest.raises(FencedError):
+        store.claim_fence("e1", (1, 9), "svc-a")
+    with pytest.raises(FencedError):
+        store.check_fence("e1", (1, 1), "svc-b")
+    assert store.read_fence("e1") == ((2, 5), "svc-c")
+
+
+def test_epochless_clients_keep_legacy_interleaving():
+    """Back-compat guard: two standalone clients over one root (no
+    manager, no epochs) must still interleave writes — the fencing
+    regime is strictly opt-in."""
+    root = tempfile.mkdtemp()
+    c1 = LocalClient(root)
+    eid = c1.create_experiment(CreateExperiment(
+        config=_cfg_json("legacy", budget=4))).exp_id
+    s1 = c1.suggest(eid, 1).suggestions[0]
+    c2 = LocalClient(root)
+    c2.create_experiment(CreateExperiment(config={}, exp_id=eid))
+    s2 = c2.suggest(eid, 1).suggestions[0]
+    # both incarnations keep writing: no fence record was ever created
+    assert c1.observe(ObserveRequest(eid, s1.suggestion_id, s1.assignment,
+                                     value=0.5)).accepted
+    assert c2.observe(ObserveRequest(eid, s2.suggestion_id, s2.assignment,
+                                     value=0.6)).accepted
+    assert c1.store.read_fence(eid) == (EPOCH_ZERO, "")
+
+
+def test_zombie_incarnation_fenced_after_higher_epoch_adoption():
+    """The tentpole invariant: once a newer epoch claims the experiment,
+    the old incarnation's durable writes are rejected with ``fenced``
+    and never reach the observation log."""
+    root = tempfile.mkdtemp()
+    zombie = LocalClient(root)
+    eid = zombie.create_experiment(CreateExperiment(
+        config=_cfg_json("fence", budget=6), exp_id="exp-fence",
+        epoch=[1, 1])).exp_id
+    held = zombie.suggest(eid, 2).suggestions
+    assert len(held) == 2
+
+    # a new owner adopts at a higher epoch (manager grant after e.g. a
+    # false-positive death during a partition)
+    owner = LocalClient(root)
+    owner.create_experiment(CreateExperiment(config={}, exp_id=eid,
+                                             epoch=[1, 2]))
+    # the zombie heals and tries to write: rejected, nothing logged
+    with pytest.raises(ApiError) as ei:
+        zombie.observe(ObserveRequest(eid, held[0].suggestion_id,
+                                      held[0].assignment, value=0.9))
+    assert ei.value.code == E_FENCED
+    records = owner.store.load_observation_records(eid)
+    assert records == [], "fenced write must never reach the log"
+    # the zombie stood down: even its cheap hot path answers fenced now
+    with pytest.raises(ApiError) as ei:
+        zombie.suggest(eid, 1)
+    assert ei.value.code == E_FENCED
+    with pytest.raises(ApiError) as ei:
+        zombie.observe(ObserveRequest(eid, held[1].suggestion_id,
+                                      held[1].assignment, value=0.9))
+    assert ei.value.code == E_FENCED
+
+    # the rightful owner serves and logs normally — including the ids
+    # the zombie handed out (the trial outcome is real data)
+    r = owner.observe(ObserveRequest(eid, held[0].suggestion_id,
+                                     held[0].assignment, value=0.4))
+    assert r.accepted and not r.duplicate
+    # ...exactly once: the same id dedupes
+    r2 = owner.observe(ObserveRequest(eid, held[0].suggestion_id,
+                                      held[0].assignment, value=0.4))
+    assert r2.duplicate and not r2.accepted
+    records = owner.store.load_observation_records(eid)
+    assert len(records) == 1
+    assert records[0]["suggestion_id"] == held[0].suggestion_id
+    assert owner.status(eid).epoch == [1, 2]
+
+
+def test_closed_set_rebuilt_from_log_across_adoptions():
+    """A suggestion observed under owner N must dedupe under owner N+1:
+    the adopting incarnation rebuilds its closed set from the log's
+    ``suggestion_id`` column."""
+    root = tempfile.mkdtemp()
+    a = LocalClient(root)
+    eid = a.create_experiment(CreateExperiment(
+        config=_cfg_json("dedupe", budget=4), exp_id="exp-dedupe",
+        epoch=[1, 1])).exp_id
+    s = a.suggest(eid, 1).suggestions[0]
+    assert a.observe(ObserveRequest(eid, s.suggestion_id, s.assignment,
+                                    value=0.7)).accepted
+    b = LocalClient(root)
+    b.create_experiment(CreateExperiment(config={}, exp_id=eid,
+                                         epoch=[1, 2]))
+    # a straggler re-reports the already-logged suggestion to the NEW owner
+    r = b.observe(ObserveRequest(eid, s.suggestion_id, s.assignment,
+                                 value=0.7))
+    assert r.duplicate and not r.accepted
+    assert len(b.store.load_observation_records(eid)) == 1
+
+
+# -------------------------------------------------------- rebalance-on-add
+def test_rebalance_on_add_moves_minimal_set_and_transfers_pendings():
+    root = tempfile.mkdtemp()
+    manager = FleetManager(store=root)
+    shards = {f"shard-{i}": LocalClient(root) for i in range(3)}
+    for sid, c in shards.items():
+        manager.add_shard(c, shard_id=sid)
+    client = FleetClient(manager, heartbeat=False)
+    exp_ids = []
+    pendings = {}
+    for i in range(8):
+        eid = client.create_experiment(CreateExperiment(
+            config=_cfg_json(f"rb-{i}", budget=4),
+            exp_id=f"exp-rb-{i:02d}")).exp_id
+        exp_ids.append(eid)
+        pendings[eid] = {s.suggestion_id: s.assignment
+                         for s in client.suggest(eid, 2).suggestions}
+    # pick a joining shard id whose ring position actually captures some
+    # of our 8 keys (with 64 vnodes a specific name may capture none —
+    # the hash is deterministic, so search once and stay deterministic)
+    new_sid = next(s for s in (f"shard-new-{i}" for i in range(64))
+                   if manager.ring.moved_by_adding(s, exp_ids))
+    predicted = set(manager.ring.moved_by_adding(new_sid, exp_ids))
+    old_owner = {e: manager.owner_of(e) for e in predicted}
+
+    new_client = LocalClient(root)
+    manager.add_shard(new_client, shard_id=new_sid)
+
+    # exactly the predicted minimal set moved, journal completed + cleared
+    moved = {ev["exp_id"] for ev in manager.events
+             if ev["event"] == "handover"}
+    assert moved == predicted
+    assert manager.store.read_fleet_state("rebalance") is None
+    assert manager.stats["rebalanced"] == len(predicted)
+    for eid in exp_ids:
+        hosted = manager.owner_of(eid).shard_id
+        assert (eid in new_client._exps) == (eid in predicted)
+        assert (hosted == new_sid) == (eid in predicted)
+    for eid in predicted:
+        # the drained owner answers wrong_shard (re-route), never re-adopts
+        with pytest.raises(ApiError) as ei:
+            old_owner[eid].client.suggest(eid, 1)
+        assert ei.value.code == E_WRONG_SHARD
+        # fence record granted by the manager's rebalance epoch
+        epoch, _ = manager.store.read_fence(eid)
+        assert epoch > EPOCH_ZERO and epoch[0] == manager.term
+
+    # transferred pendings are re-served FIRST on the new owner, under
+    # their original ids (the constant-liar lie travelled with them)
+    probe_eid = sorted(predicted)[0]
+    got = client.suggest(probe_eid, 2)
+    assert {s.suggestion_id for s in got.suggestions} \
+        == set(pendings[probe_eid])
+
+    # every experiment still completes exactly on budget through the
+    # router: the outstanding pendings land once, then fresh fills
+    for eid in exp_ids:
+        seen = set(pendings[eid])
+        for sid_, asg in pendings[eid].items():
+            r = client.observe(ObserveRequest(eid, sid_, asg, value=0.5))
+            assert r.accepted and not r.duplicate
+        deadline = time.monotonic() + 20
+        while client.status(eid).observations < 4:
+            assert time.monotonic() < deadline, eid
+            for s in client.suggest(eid, 4).suggestions:
+                assert s.suggestion_id not in seen, "id served twice"
+                seen.add(s.suggestion_id)
+                r = client.observe(ObserveRequest(
+                    eid, s.suggestion_id, s.assignment, value=0.5))
+                assert r.accepted and not r.duplicate
+        st = client.status(eid)
+        assert st.observations == 4 and st.pending == 0
+    for eid in exp_ids:
+        recs = Store(root).load_observation_records(eid)
+        ids = [r["suggestion_id"] for r in recs]
+        assert len(recs) == 4 and len(set(ids)) == 4, \
+            "every observation lands exactly once"
+    client.close()
+
+
+def test_rebalance_journal_rolls_back_when_target_gone():
+    root = tempfile.mkdtemp()
+    store = Store(root)
+    store.write_fleet_state("rebalance", {
+        "id": "dead", "to": "shard-ghost", "term": 1,
+        "entries": [{"exp_id": "exp-x", "from": "shard-0",
+                     "epoch": [1, 3], "done": False}]})
+    # a new active manager resumes the journal at construction: the
+    # target shard never re-joined, so the handover rolls back cleanly
+    manager = FleetManager(store=store)
+    assert store.read_fleet_state("rebalance") is None
+    assert any(ev["event"] == "rebalance_rollback"
+               for ev in manager.events)
+    assert "exp-x" not in manager._experiments
+
+
+# ------------------------------------------------------------ standby
+def test_standby_takes_over_resumes_journal_and_fences_old_manager():
+    root = tempfile.mkdtemp()
+    clients = {f"shard-{i}": LocalClient(root) for i in range(3)}
+    active = FleetManager(store=root, manager_id="mgr-a", period=0.1)
+    for sid in ("shard-0", "shard-1"):
+        active.add_shard(clients[sid], shard_id=sid)
+    fc = FleetClient(active, heartbeat=False)
+    exp_ids = [fc.create_experiment(CreateExperiment(
+        config=_cfg_json(f"ha-{i}", budget=3),
+        exp_id=f"exp-ha-{i:02d}")).exp_id for i in range(6)]
+    held = {e: fc.suggest(e, 1).suggestions for e in exp_ids}
+    fc.beat()   # holdings reach the event tail for the standby to replay
+
+    # the active manager crashes mid-rebalance: shard-2 installed and
+    # journaled, but no handover ran yet
+    moved = active.ring.moved_by_adding("shard-2", exp_ids)
+    assert moved, "need a non-empty disruption set for this test"
+    active.add_shard(clients["shard-2"], shard_id="shard-2",
+                     rebalance=False)
+    active.store.write_fleet_state("rebalance", {
+        "id": "j1", "to": "shard-2", "term": active.term,
+        "entries": [{"exp_id": e,
+                     "from": active._experiments.get(e, ""),
+                     "epoch": active._grant_epoch(), "done": False}
+                    for e in sorted(moved)]})
+    old_term = active.term
+    active._renew_lease()   # last sign of life, then "crash"
+    active.stop()           # no more lease renewals
+
+    standby = FleetManager(store=root, manager_id="mgr-b", standby=True,
+                           period=0.1, lease_timeout=0.2,
+                           shard_resolver=lambda sid, url: clients[sid])
+    assert standby.role == "standby"
+    assert standby.poll_standby() is False, "fresh lease: no takeover"
+    time.sleep(0.35)
+    assert standby.poll_standby() is True
+    assert standby.role == "active" and standby.term == old_term + 1
+
+    # journal resumed at the NEW term: moved experiments live on shard-2
+    # with fences that out-rank every grant of the deposed manager
+    assert standby.store.read_fleet_state("rebalance") is None
+    for eid in moved:
+        assert standby._experiments[eid] == "shard-2"
+        assert eid in clients["shard-2"]._exps
+        epoch, _ = standby.store.read_fence(eid)
+        assert epoch[0] == standby.term
+    # worker holdings were rebuilt from the event tail
+    rec = standby.registry.get(fc.worker_id)
+    assert rec is not None and rec.holdings == fc.holdings()
+    # the deposed manager notices at its next lease renewal and stands down
+    assert active._renew_lease() is False
+    assert active.role == "deposed"
+    active.tick()   # no-op: a deposed manager must not probe or grant
+
+    # the fleet keeps working through the new manager, exactly on budget
+    fc2 = FleetClient(standby, heartbeat=False)
+    for eid in exp_ids:
+        seen = {s.suggestion_id for s in held[eid]}
+        for s in held[eid]:     # old pendings still land exactly once
+            r = fc2.observe(ObserveRequest(eid, s.suggestion_id,
+                                           s.assignment, value=0.5))
+            assert r.accepted and not r.duplicate
+        deadline = time.monotonic() + 20
+        while fc2.status(eid).observations < 3:
+            assert time.monotonic() < deadline, eid
+            for s in fc2.suggest(eid, 3).suggestions:
+                assert s.suggestion_id not in seen
+                seen.add(s.suggestion_id)
+                assert fc2.observe(ObserveRequest(
+                    eid, s.suggestion_id, s.assignment,
+                    value=0.5)).accepted
+        ids = [r["suggestion_id"]
+               for r in Store(root).load_observation_records(eid)]
+        assert len(ids) == 3 and len(set(ids)) == 3
+    fc.close()
+    fc2.close()
+
+
+# ------------------------------------------------------------ chaos harness
+def _drive(client, exp_ids, seen, budget):
+    """One best-effort suggest/observe round per experiment; returns how
+    many experiments are complete.  Transport failures (injected) are
+    retried on later rounds — exactly what a scheduler does.  ``seen``
+    accumulates *observed* ids per experiment: a requeue/transfer may
+    legitimately re-serve an un-observed pending, but an id that already
+    landed in the log must never be handed out again."""
+    done = 0
+    for eid in exp_ids:
+        try:
+            st = client.status(eid)
+            if st.observations >= budget:
+                done += 1
+                continue
+            for s in client.suggest(eid, 2).suggestions:
+                assert s.suggestion_id not in seen[eid], \
+                    f"{eid}: re-served an already-observed id"
+                r = client.observe(ObserveRequest(
+                    eid, s.suggestion_id, s.assignment, value=0.5))
+                assert not r.duplicate, f"{eid}: duplicate observe"
+                if r.accepted:
+                    seen[eid].add(s.suggestion_id)
+        except (ApiError, InjectedPartition, ConnectionRefusedError):
+            continue    # partitioned this round — retry after heal
+    return done
+
+
+@chaos
+@pytest.mark.parametrize("seed", [0, 1, 7])
+def test_chaos_partition_heal_rebalance_exactly_once(seed):
+    """Acceptance: a seeded fault plan interleaving client↔shard
+    partitions, a manager↔shard partition long enough to declare the
+    shard dead (adoption + zombie), a heal, and a live shard-add
+    rebalance — k=8 experiments all complete exactly on budget, no
+    suggestion id is ever served twice, and the zombie's post-heal
+    writes are rejected with ``fenced``."""
+    budget, k = 4, 8
+    root = tempfile.mkdtemp()
+    plan = FaultPlan(seed=seed)
+    # schedule: the worker loses shard-1 for a while (routed retries),
+    # the manager loses shard-2 for long enough to declare it dead
+    plan.partition("w-chaos", "shard-1", at=3, until=9)
+    plan.partition("manager", "shard-2", at=5)
+    manager = FleetManager(store=root, period=0.05, probe_timeout=0.5,
+                           fault_plan=plan)
+    shards = {f"shard-{i}": LocalClient(root) for i in range(3)}
+    for sid, c in shards.items():
+        manager.add_shard(c, shard_id=sid)
+    client = FleetClient(manager, worker_id="w-chaos", heartbeat=False,
+                         fault_plan=plan)
+    exp_ids = [client.create_experiment(CreateExperiment(
+        config=_cfg_json(f"chaos-{i}", budget=budget),
+        exp_id=f"exp-chaos-{i:02d}")).exp_id for i in range(k)]
+    seen = {e: set() for e in exp_ids}
+    victims = [e for e in exp_ids
+               if manager.owner_of(e).shard_id == "shard-2"]
+
+    added = False
+    for round_no in range(200):
+        manager.tick()          # advances plan tick + probes + sweeps
+        done = _drive(client, exp_ids, seen, budget)
+        if manager.stats["dead_shards"] >= 1 and not added:
+            # shard-2 was declared dead (its experiments adopted at a
+            # fresh epoch); now heal everything and add a new shard so
+            # a rebalance interleaves with the tail of the run
+            plan.heal()
+            shards["shard-3"] = LocalClient(root)
+            manager.add_shard(shards["shard-3"], shard_id="shard-3")
+            added = True
+        elif added and done == len(exp_ids):
+            break
+        time.sleep(0.02)
+    assert added, "fault plan must declare shard-2 dead"
+
+    # the zombie shard healed: its in-memory state is intact, but every
+    # durable write it attempts is fenced and never reaches the log
+    for eid in victims:
+        if shards["shard-2"]._exps.get(eid) is None:
+            continue
+        with pytest.raises(ApiError) as ei:
+            shards["shard-2"].observe(ObserveRequest(
+                eid, "zombie-sid", {"x": 0.5}, value=0.1))
+        assert ei.value.code == E_FENCED
+    if victims:
+        assert manager.stats["adopted"] >= len(victims)
+
+    # every budget completes exactly; every observation landed exactly once
+    store = Store(root)
+    for eid in exp_ids:
+        deadline = time.monotonic() + 30
+        while client.status(eid).observations < budget:
+            assert time.monotonic() < deadline, eid
+            _drive(client, [eid], seen, budget)
+        recs = store.load_observation_records(eid)
+        ids = [r["suggestion_id"] for r in recs]
+        assert len(recs) == budget, eid
+        assert len(set(ids)) == budget, f"{eid}: duplicate log entry"
+        st = client.status(eid)
+        assert st.observations == budget and st.pending == 0
+    client.close()
+
+
+@chaos
+def test_chaos_manager_kill_mid_rebalance_standby_resumes():
+    """Acceptance: kill the active manager mid-rebalance (journal
+    written, handovers incomplete) — the standby takes over, resumes the
+    journal at a higher term, and every experiment completes exactly."""
+    budget, k = 3, 8
+    root = tempfile.mkdtemp()
+    clients = {f"shard-{i}": LocalClient(root) for i in range(4)}
+    active = FleetManager(store=root, manager_id="mgr-a", period=0.05)
+    for i in range(3):
+        active.add_shard(clients[f"shard-{i}"], shard_id=f"shard-{i}")
+    fc = FleetClient(active, heartbeat=False)
+    exp_ids = [fc.create_experiment(CreateExperiment(
+        config=_cfg_json(f"mk-{i}", budget=budget),
+        exp_id=f"exp-mk-{i:02d}")).exp_id for i in range(k)]
+    held = {e: fc.suggest(e, 1).suggestions for e in exp_ids}
+    moved = sorted(active.ring.moved_by_adding("shard-3", exp_ids))
+    assert moved
+    # crash exactly between journal write and the first handover
+    active.add_shard(clients["shard-3"], shard_id="shard-3",
+                     rebalance=False)
+    active.store.write_fleet_state("rebalance", {
+        "id": "jX", "to": "shard-3", "term": active.term,
+        "entries": [{"exp_id": e, "from": active._experiments.get(e, ""),
+                     "epoch": active._grant_epoch(), "done": False}
+                    for e in moved]})
+    active.stop()
+
+    standby = FleetManager(store=root, manager_id="mgr-b", standby=True,
+                           period=0.05, lease_timeout=0.15,
+                           shard_resolver=lambda sid, url: clients[sid])
+    deadline = time.monotonic() + 10
+    while not standby.poll_standby():
+        assert time.monotonic() < deadline
+        time.sleep(0.05)
+    assert standby.store.read_fleet_state("rebalance") is None
+    for eid in moved:
+        assert standby._experiments[eid] == "shard-3"
+
+    fc2 = FleetClient(standby, heartbeat=False)
+    seen = {e: set() for e in exp_ids}
+    for eid in exp_ids:
+        # the dead manager's clients still hold one pending each; they
+        # land exactly once wherever the experiment now lives
+        for s in held[eid]:
+            r = fc2.observe(ObserveRequest(eid, s.suggestion_id,
+                                           s.assignment, value=0.5))
+            assert r.accepted and not r.duplicate
+            seen[eid].add(s.suggestion_id)
+    deadline = time.monotonic() + 30
+    while _drive(fc2, exp_ids, seen, budget) < len(exp_ids):
+        assert time.monotonic() < deadline
+    store = Store(root)
+    for eid in exp_ids:
+        ids = [r["suggestion_id"]
+               for r in store.load_observation_records(eid)]
+        assert len(ids) == budget and len(set(ids)) == budget
+    fc.close()
+    fc2.close()

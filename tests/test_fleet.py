@@ -12,6 +12,7 @@ import signal
 import subprocess
 import sys
 import tempfile
+import threading
 import time
 
 import pytest
@@ -623,3 +624,122 @@ def test_quality_counters_empty_until_observations():
     q = client.status(eid).pump["quality"]
     assert q["sparse_n"] == 0 and q["sparse_mean_regret"] is None
     assert q["exact_n"] == 0 and q["exact_mean_regret"] is None
+
+
+# --------------------------------------------------- transport robustness
+def test_http_client_backoff_counters_on_refused_connect():
+    """Bounded exponential backoff with full jitter: a refused connect
+    retries up to ``retry_attempts`` times (any verb — the server
+    provably never saw the request), then surfaces ``service
+    unreachable``; every step lands in the per-client counters."""
+    from repro.api.http import HTTPClient
+    from repro.api.protocol import E_INTERNAL
+    # a port nothing listens on -> instant ConnectionRefusedError
+    c = HTTPClient("http://127.0.0.1:9", retry_attempts=3,
+                   retry_base=0.001, retry_cap=0.002, retry_seed=0)
+    with pytest.raises(ApiError) as ei:
+        c.load()
+    assert ei.value.code == E_INTERNAL
+    assert "unreachable" in str(ei.value)
+    assert c.stats["refused"] == 3, "one refused connect per attempt"
+    assert c.stats["backoffs"] == 2, "every retry but the last slept"
+    assert c.stats["gave_up"] == 1
+    # non-idempotent verbs retry refused connects too (send-phase failure
+    # = never reached the service), with the same bound
+    with pytest.raises(ApiError):
+        c.suggest("exp-x", 1)
+    assert c.stats["refused"] == 6 and c.stats["gave_up"] == 2
+    c.close()
+
+
+def test_http_status_carries_transport_counters():
+    from repro.api.http import HTTPClient, serve_api
+    root = tempfile.mkdtemp()
+    srv = serve_api(root).start()
+    try:
+        c = HTTPClient(srv.url, retry_seed=0)
+        eid = c.create_experiment(CreateExperiment(
+            config=_cfg_json("transport", budget=2))).exp_id
+        st = c.status(eid)
+        assert st.transport is not None
+        assert {"retries", "backoffs", "backoff_ms", "refused",
+                "gave_up"} <= set(st.transport)
+        assert st.transport["gave_up"] == 0
+        c.close()
+    finally:
+        srv.shutdown()
+
+
+def test_probe_deadline_counts_wedged_shard_toward_death():
+    """S2: a shard that accepts the probe but never answers must not
+    stall the manager's tick — the shared per-round deadline expires,
+    the probe counts as FAILED, and the shard progresses to dead
+    instead of hiding behind the slow-not-dead re-beat guard."""
+    class WedgedClient:
+        def __init__(self):
+            self.block = threading.Event()
+
+        def load(self):
+            self.block.wait(30)         # wedged: never answers
+            return {}
+
+    manager = FleetManager(period=0.05, probe_timeout=0.1)
+    wedged = WedgedClient()
+    manager.add_shard(wedged, shard_id="shard-wedge")
+    handle = manager._shards["shard-wedge"]
+    t0 = time.monotonic()
+    manager.tick()
+    # the tick returned promptly (deadline, not the 30s hang)...
+    assert time.monotonic() - t0 < 5.0
+    # ...and the timed-out probe counted as a failed probe
+    assert handle.probe_timeouts >= 1
+    assert handle.probe_failures >= 1
+    assert manager.stats["probe_timeouts"] >= 1
+    deadline = time.monotonic() + 10
+    while manager.stats["dead_shards"] < 1:
+        assert time.monotonic() < deadline, "wedged shard never died"
+        time.sleep(0.05)
+        manager.tick()
+    assert manager.registry.state("shard-wedge") == S_DEAD
+    wedged.block.set()                  # unwedge the probe threads
+
+
+def test_heartbeat_errors_audited_with_bounded_dedupe():
+    """S6: heartbeat failures must never be swallowed silently — the
+    audit trail records the first occurrence and every 32nd repeat,
+    with a bounded per-error counter; close() joins the beat thread."""
+    manager, _ = _inproc_fleet(1)
+    fc = FleetClient(manager, heartbeat=False)
+    for _ in range(64):
+        fc._audit_beat_error(RuntimeError("boom"))
+    assert fc.beat_errors() == {"RuntimeError: boom": 64}
+    audited = [e for e in fc.events if e["event"] == "beat_error"]
+    assert [e["count"] for e in audited] == [1, 32, 64]
+    # the error-key table is bounded: distinct errors evict the oldest
+    for i in range(40):
+        fc._audit_beat_error(ValueError(f"e{i}"))
+    assert len(fc.beat_errors()) <= 32
+    t0 = time.monotonic()
+    fc.close()
+    assert time.monotonic() - t0 < 5.0
+
+    # end-to-end: a live beat thread whose manager edge is partitioned
+    # lands the failure in the audit trail instead of dropping it
+    from repro.core.faults import FaultPlan
+    plan = FaultPlan(seed=1)
+    plan.partition("w-audit", "manager", at=0)
+    plan.tick()
+    fc2 = FleetClient(manager, worker_id="w-audit", heartbeat=False,
+                      fault_plan=plan)
+    with pytest.raises(Exception):
+        fc2.beat()
+    fc2._hb_thread = threading.Thread(target=fc2._beat_loop, daemon=True)
+    fc2._period = 0.02
+    fc2._hb_thread.start()
+    deadline = time.monotonic() + 5
+    while not fc2.beat_errors():
+        assert time.monotonic() < deadline, "beat error never audited"
+        time.sleep(0.02)
+    assert any("InjectedPartition" in k or "unreachable" in k
+               for k in fc2.beat_errors())
+    fc2.close()
