@@ -1,0 +1,93 @@
+"""Serial vs batched cross-experiment GP hyperfit cost (ISSUE 8).
+
+Measures the per-fit wall cost of k concurrent experiments' deferred
+hyperparameter refits at the h=50 operating point (shape bucket 64,
+warm-start Adam, ``warm_fit_steps=40`` — exactly what the adaptive
+schedule runs in steady state):
+
+* ``serial/k8``   — k independent ``gp.fit_gp`` calls, one per
+  experiment (the pre-ISSUE-8 FitExecutor path: one dispatch per fit).
+* ``batched/k8``  — ONE ``gp.batched_fit`` dispatch fitting all k lanes
+  through the vmap'd masked Adam loop (what the executor's co-batching
+  path runs when k experiments' debt lands in one gather window).
+* ``batched/k32`` — same at the ``FIT_LANES_MAX`` width, where the
+  per-dispatch fixed overhead amortizes furthest.
+
+Rows are µs **per fit** so the serial/batched ratio reads directly as
+the throughput speedup.  On a single-core CPU host the win is bounded
+by LAPACK per-lane call overhead (measured ~1.7-2x here); the vmap'd
+dispatch exists for per-device batching on TPU, where lanes share the
+fused Pallas NLL kernel (see API.md §Fit batching).
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.suggest import gp
+
+H = 50          # history size -> bucket 64
+D = 4
+STEPS = 40      # BayesOpt.warm_fit_steps at h=50 (see _warm_steps_at)
+BUCKET = 64
+
+
+def _experiments(k, seed=0):
+    """k experiments' (x, y, warm params0) at h=50, warm-started the way
+    the pump would (a prior fit's params seed the next warm fit)."""
+    rng = np.random.default_rng(seed)
+    items = []
+    for i in range(k):
+        x = rng.random((H, D))
+        w = rng.random(D)
+        y = np.sin(3.0 * x @ w) + 0.1 * rng.standard_normal(H)
+        post = gp.fit_gp(x, y, steps=8, bucket=BUCKET)   # warm start
+        items.append((x, y, post.params))
+    return items
+
+
+def run(reps=5, quick=False):
+    """Yield (row_suffix, samples) with samples in µs per fit."""
+    if quick:
+        reps = 3
+    widths = (8, 32)
+    items = _experiments(max(widths))
+    # pay every compile up front (fit_gp per-bucket jit + batched_fit's
+    # (bucket, steps, k_pad) lanes) so rows measure steady state
+    for x, y, p0 in items[:1]:
+        gp.fit_gp(x, y, steps=STEPS, params0=p0, bucket=BUCKET)
+    for k in widths:
+        gp.batched_fit(items[:k], steps=STEPS, bucket=BUCKET)
+
+    serial = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for x, y, p0 in items[:8]:
+            post = gp.fit_gp(x, y, steps=STEPS, params0=p0, bucket=BUCKET)
+            # fit_gp dispatches async — block or the row measures enqueue
+            jax.block_until_ready(post.chol)
+        serial.append((time.perf_counter() - t0) / 8 * 1e6)
+    yield "serial/k8", serial
+
+    for k in widths:
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            gp.batched_fit(items[:k], steps=STEPS, bucket=BUCKET)
+            samples.append((time.perf_counter() - t0) / k * 1e6)
+        yield f"batched/k{k}", samples
+
+
+def main():
+    print("row,us_per_fit,speedup_vs_serial")
+    base = None
+    for suffix, samples in run():
+        us = min(samples)
+        if suffix == "serial/k8":
+            base = us
+        ratio = f"{base / us:.2f}" if base else ""
+        print(f"bench_fit/{suffix},{us:.0f},{ratio}")
+
+
+if __name__ == "__main__":
+    main()

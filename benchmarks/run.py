@@ -103,6 +103,11 @@ def collect(quick: bool = False) -> dict:
         # tail during a live shard-add rebalance is the row's point, so
         # commit the p90
         _reduce(rows, stats, f"bench_fleet/{suffix}", us, gate="p90")
+    from benchmarks import bench_fit
+    for suffix, us in bench_fit.run(quick=quick):
+        # serial vs batched cross-experiment hyperfit cost (ISSUE 8):
+        # µs per fit, so batched/serial reads as the throughput ratio
+        _reduce(rows, stats, f"bench_fit/{suffix}", us)
     return {"rows": rows, "stats": stats}
 
 
@@ -138,11 +143,12 @@ def main(argv=None) -> None:
               file=sys.stderr)
         return
 
-    from benchmarks import (bench_fleet, bench_optimizers, bench_parallel,
-                            bench_population, bench_roofline,
-                            bench_scheduler, bench_suggest_latency)
+    from benchmarks import (bench_fit, bench_fleet, bench_optimizers,
+                            bench_parallel, bench_population,
+                            bench_roofline, bench_scheduler,
+                            bench_suggest_latency)
     for mod in (bench_parallel, bench_optimizers, bench_suggest_latency,
-                bench_scheduler, bench_fleet, bench_population,
+                bench_fit, bench_scheduler, bench_fleet, bench_population,
                 bench_roofline):
         print(f"\n===== {mod.__name__} =====")
         try:

@@ -33,7 +33,8 @@ import sys
 import time
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
-GATED_PREFIXES = ("bench_suggest/gp", "bench_service/", "bench_fleet/")
+GATED_PREFIXES = ("bench_suggest/gp", "bench_service/", "bench_fleet/",
+                  "bench_fit/")
 # Reported but never gated: the synchronous (prefetch=0) row is the
 # deliberately-slow pre-pipeline reference, not a served path; the
 # rebalance row tracks the suggest tail during a live shard-add handover
@@ -67,6 +68,13 @@ def main(argv=None) -> int:
 
     collected = bench_run.collect(quick=True)
     fresh, fresh_stats = collected["rows"], collected["stats"]
+    prior_rows = {}
+    if pathlib.Path(args.baseline).exists():
+        try:
+            prior_rows = json.loads(
+                pathlib.Path(args.baseline).read_text()).get("rows") or {}
+        except json.JSONDecodeError:
+            pass
     out = args.out or (args.baseline if args.update else None)
     if out:
         # merge into an existing baseline: the quick sweep covers only a
@@ -91,6 +99,19 @@ def main(argv=None) -> int:
         print(f"wrote {out} ({len(fresh)} refreshed, "
               f"{len(payload['rows'])} total rows)")
     if args.update:
+        # per-row before/after delta table: --update silently rewriting
+        # the committed numbers is how a regression sneaks into the
+        # baseline — make what changed explicit at refresh time
+        print(f"\n{'row':44s} {'before':>10s} {'after':>10s} {'delta':>8s}")
+        for name, us in sorted(fresh.items()):
+            ref = prior_rows.get(name)
+            if ref:
+                pct = (us - ref) / ref * 100.0
+                delta = f"{pct:+.0f}%"
+                before = f"{ref:.0f}us"
+            else:
+                delta, before = "new", "-"
+            print(f"{name:44s} {before:>10s} {us:>9.0f}us {delta:>8s}")
         return 0
 
     base_path = pathlib.Path(args.baseline)

@@ -770,7 +770,12 @@ class LocalClient(SuggestionClient):
                     if n_s else None),
                 "exact_mean_regret": (
                     round(state.stats["exact_regret"] / n_e, 6)
-                    if n_e else None)}
+                    if n_e else None),
+                # live auto-tuned sparse-subset budget (closes the PR 5
+                # follow-up: the pump feeds these regret counters back
+                # through Optimizer.tune_sparse each tick)
+                "sparse_max": getattr(
+                    state.optimizer, "_sparse_max", None)}
             if pump is not None:
                 # None until a fit was actually submitted — a monitoring
                 # read must not spawn the executor's worker pool

@@ -69,6 +69,46 @@ ASK_CHUNK = 8
 #: refilling, which beats idle maintenance debt.
 PRIO_MISS, PRIO_REFILL, PRIO_IDLE = 0, 1, 2
 
+#: Sentinel a ``BatchableFit.snapshot`` returns to mean "requeue me"
+#: (the optimizer lock was contended) — distinct from None ("nothing
+#: owed, drop the job").
+RETRY = object()
+
+
+class FitLane:
+    """One experiment's snapshotted fit, ready to join a batched
+    dispatch: ``spec`` is the optimizer's batchable fit descriptor
+    (``Optimizer.fit_spec`` — bucket, step count, copied arrays, a
+    ``runner``) and ``install`` applies the fitted hyperparameters under
+    that experiment's locks.  Lanes sharing ``group_key`` fit together
+    in ONE vmap'd dispatch (``gp.batched_fit``)."""
+
+    __slots__ = ("spec", "install")
+
+    def __init__(self, spec, install):
+        self.spec = spec
+        self.install = install
+
+    @property
+    def group_key(self):
+        """Lanes may co-batch iff this matches: same runner (optimizer
+        family), same shape bucket, same Adam step count — anything else
+        would change a lane's result or force a fresh XLA compile."""
+        return (self.spec.runner, self.spec.bucket, self.spec.steps)
+
+
+class BatchableFit:
+    """Marker wrapper for executor jobs that can co-batch (ISSUE 8).
+    ``snapshot()`` runs on a worker thread and returns a ``FitLane``,
+    ``RETRY`` (lock contention — requeue), or None (debt already paid).
+    The executor gathers every queued BatchableFit whose snapshot shares
+    the primary's ``group_key`` into one dispatch."""
+
+    __slots__ = ("snapshot",)
+
+    def __init__(self, snapshot: Callable[[], Any]):
+        self.snapshot = snapshot
+
 
 class FitExecutor:
     """Process-wide executor for deferred hyperparameter fits (ISSUE 5).
@@ -95,6 +135,16 @@ class FitExecutor:
     #: idle wait between queue polls (wakes are event-driven via submit)
     IDLE_WAIT = 0.25
 
+    #: how long a non-urgent batchable fit waits for co-batchable peers
+    #: to arrive before dispatching (seconds).  PRIO_MISS fits never
+    #: wait — a request is parked on that fit's install.
+    GATHER_WINDOW = 0.02
+
+    #: max experiments fitted in one batched dispatch; also the k the
+    #: executor pads to (``gp.lane_pad``), so one compile per bucket
+    #: covers every batch width up to this
+    MAX_LANES = 8
+
     #: window (seconds) over which the duty cycle decays — admission
     #: control wants *recent* saturation, not the lifetime average
     DUTY_WINDOW = 30.0
@@ -111,7 +161,8 @@ class FitExecutor:
         self._active: set = set()               # keys running on a worker
         self._seq = 0
         self._stopped = False
-        self.stats = {"executed": 0, "coalesced": 0, "requeued": 0}
+        self.stats = {"executed": 0, "coalesced": 0, "requeued": 0,
+                      "batched": 0, "lanes": 0}
         # duty-cycle accounting (the fleet's admission-control signal):
         # busy worker-seconds, decayed over DUTY_WINDOW so a burst of
         # fits shows up — and clears — within one window
@@ -209,8 +260,12 @@ class FitExecutor:
             self._decay_duty(now)
             cap = self.workers * self.DUTY_WINDOW / 2.0
             duty = min(1.0, self._duty_busy / cap) if cap > 0 else 0.0
+            batched = self.stats["batched"]
+            mean_batch = (round(self.stats["lanes"] / batched, 3)
+                          if batched else 0.0)
             return dict(self.stats, backlog=len(self._jobs),
-                        workers=self.workers, duty=round(duty, 4))
+                        workers=self.workers, duty=round(duty, 4),
+                        mean_batch=mean_batch)
 
     # ----------------------------------------------------------- workers
     def _pop(self):
@@ -240,16 +295,23 @@ class FitExecutor:
                 continue
             key, fn, prio = item
             err = None
+            sleep_adj = 0.0
             t0 = time.monotonic()
             try:
-                again = bool(fn())
+                if isinstance(fn, BatchableFit):
+                    again, sleep_adj = self._run_batch(key, fn, prio)
+                else:
+                    again = bool(fn())
             except Exception as e:  # noqa: executor must survive any job
                 again = False
                 err = f"{type(e).__name__}: {e}"
             with self._cv:
                 self._active.discard(key)   # before any re-submit
                 self._decay_duty(time.monotonic())
-                self._duty_busy += time.monotonic() - t0
+                # gather-window sleeps are idle time, not fit work —
+                # they must not inflate the admission-control duty cycle
+                self._duty_busy += max(
+                    0.0, time.monotonic() - t0 - sleep_adj)
                 self.stats["executed"] += 1
                 if again:
                     self.stats["requeued"] += 1
@@ -261,6 +323,89 @@ class FitExecutor:
                     self.stats["last_error"] = err
             if again:
                 self.submit(key, fn, prio)
+
+    def _run_batch(self, key: Any, fn: BatchableFit,
+                   prio: int) -> tuple:
+        """Execute one batchable fit, co-batching queued peers (ISSUE 8).
+
+        Snapshot the primary lane; unless the fit is miss-urgent, sleep
+        one GATHER_WINDOW so concurrently-owed experiments can queue;
+        then pull every queued ``BatchableFit`` whose snapshot shares
+        the primary's (runner, bucket, steps) group and dispatch them
+        all through ONE ``runner(specs)`` call — the optimizer stacks
+        the lanes and runs the Adam loop vmap'd, so k fits cost one XLA
+        dispatch instead of k.  Installs run per lane, individually
+        exception-guarded, each under its own experiment's optimizer
+        lock (the PR 5 two-phase contract is per lane, unchanged).
+
+        Returns (requeue_primary, seconds_slept) — the sleep is
+        subtracted from the duty-cycle accounting by ``_run``."""
+        lane = fn.snapshot()
+        if lane is RETRY:
+            return True, 0.0
+        if lane is None:
+            return False, 0.0
+        slept = 0.0
+        if prio > PRIO_MISS and self.GATHER_WINDOW > 0.0:
+            # deliberate plain sleep (not a _cv wait): we *want* to stay
+            # out of the way while pumps enqueue peers
+            time.sleep(self.GATHER_WINDOW)
+            slept = self.GATHER_WINDOW
+        grabbed: List[tuple] = []
+        with self._cv:
+            for k2 in list(self._jobs):
+                if 1 + len(grabbed) >= self.MAX_LANES:
+                    break
+                p2, f2 = self._jobs[k2]
+                if isinstance(f2, BatchableFit):
+                    del self._jobs[k2]
+                    self._active.add(k2)
+                    grabbed.append((k2, p2, f2))
+        lanes = [(key, lane)]
+        for k2, p2, f2 in grabbed:
+            try:
+                l2 = f2.snapshot()
+            except Exception as e:  # noqa: peer snapshot must not kill batch
+                with self._cv:
+                    self._active.discard(k2)
+                    self.stats["failed"] = self.stats.get("failed", 0) + 1
+                    self.stats["last_error"] = f"{type(e).__name__}: {e}"
+                continue
+            if (l2 is not None and l2 is not RETRY
+                    and l2.group_key == lane.group_key):
+                lanes.append((k2, l2))
+                continue
+            # not co-batchable: release the key BEFORE re-submitting so
+            # submit() doesn't coalesce the job away as "active"
+            with self._cv:
+                self._active.discard(k2)
+            if l2 is not None:      # RETRY or mismatched group: still owed
+                self.submit(k2, f2, p2)
+        try:
+            out, dt = lane.spec.runner([l.spec for _, l in lanes])
+            per = dt / max(1, len(lanes))
+            failed = 0
+            err = None
+            for (_, l), params in zip(lanes, out):
+                try:
+                    l.install(params, per)
+                except Exception as e:  # noqa: one bad install ≠ batch loss
+                    failed += 1
+                    err = f"{type(e).__name__}: {e}"
+            with self._cv:
+                self.stats["batched"] += 1
+                self.stats["lanes"] += len(lanes)
+                # _run counts the primary; peers are accounted here
+                self.stats["executed"] += len(lanes) - 1
+                if failed:
+                    self.stats["failed"] = (
+                        self.stats.get("failed", 0) + failed)
+                    self.stats["last_error"] = err
+        finally:
+            with self._cv:
+                for k2, _ in lanes[1:]:
+                    self._active.discard(k2)
+        return False, slept
 
 
 _EXECUTOR: Optional[FitExecutor] = None
@@ -589,6 +734,7 @@ class SuggestionPump:
             for a in stale:
                 state.optimizer.forget(a)
             swept = bool(stale) or retired > 0
+            self._tune_sparse()
             self._push_fit_debt(saturated, want)
             if want <= 0:
                 return busy or swept
@@ -625,15 +771,69 @@ class SuggestionPump:
         finally:
             state.opt_lock.release()
 
+    def _tune_sparse(self) -> None:
+        """Feed the service's sparse-vs-exact suggestion quality counters
+        back into the optimizer's live sparse-subset budget (closes the
+        PR 5 follow-up: SPARSE_MAX was a fixed constant; now
+        ``Optimizer.tune_sparse`` grows/shrinks it from observed regret).
+        Called with ``opt_lock`` held."""
+        tune = getattr(self.state.optimizer, "tune_sparse", None)
+        if tune is None:
+            return
+        state = self.state
+        with state.lock:
+            quality = {k: state.stats.get(k, 0)
+                       for k in ("sparse_obs", "sparse_regret",
+                                 "exact_obs", "exact_regret")}
+        tune(quality)
+
     def _push_fit_debt(self, saturated: bool, want: int) -> None:
         """Submit owed hyperfit work to the shared executor, prioritized
         by how starved this experiment is.  Called with ``opt_lock``
-        held (``maintenance_due`` reads optimizer state)."""
+        held (``maintenance_due`` reads optimizer state).  Optimizers
+        that publish batchable fit descriptors (``batchable_fits``) go
+        through the co-batching path (ISSUE 8); the rest keep the plain
+        two-phase ``fit_job`` contract."""
         if not self.state.optimizer.maintenance_due():
             return
         prio = (PRIO_MISS if saturated
                 else PRIO_REFILL if want > 0 else PRIO_IDLE)
-        fit_executor().submit(self.fit_key, self._maintain_job, prio)
+        if getattr(self.state.optimizer, "batchable_fits", False):
+            fit_executor().submit(self.fit_key,
+                                  BatchableFit(self._fit_lane), prio)
+        else:
+            fit_executor().submit(self.fit_key, self._maintain_job, prio)
+
+    def _fit_lane(self):
+        """Snapshot this experiment's owed fit as a batchable lane
+        (``FitExecutor._run_batch``'s snapshot phase).  Returns a
+        ``FitLane``, ``RETRY`` on optimizer-lock contention, or None
+        when the debt has already been paid.  The lane's install runs
+        later on the executor thread, under ``opt_lock`` — the same
+        two-phase contract as ``_maintain_job``, split so the compute
+        phase can be shared across experiments."""
+        state = self.state
+        if self._stop.is_set():
+            return None
+        if not state.opt_lock.acquire(timeout=0.05):
+            return None if self._stop.is_set() else RETRY
+        try:
+            drain_ops(state)            # the fit should see every fold
+            spec = state.optimizer.fit_spec()
+        finally:
+            state.opt_lock.release()
+        if spec is None:
+            return None
+
+        def install(params, dt):
+            with state.opt_lock:
+                if self._stop.is_set():
+                    return
+                spec.install(params, dt)
+                with state.lock:
+                    state.stats["maintained"] = (
+                        state.stats.get("maintained", 0) + 1)
+        return FitLane(spec, install)
 
     def _maintain_job(self) -> bool:
         """One deferred hyperfit, run on the shared FitExecutor.  Phase

@@ -101,6 +101,20 @@ class Optimizer(abc.ABC):
         Must not touch model state."""
         return False
 
+    #: True when ``fit_spec`` returns batchable descriptors the shared
+    #: fit executor may co-batch across experiments (one vmap'd dispatch
+    #: per (runner, bucket, steps) group — see ISSUE 8).  Optimizers
+    #: without the split keep the plain two-phase ``fit_job`` path.
+    batchable_fits: bool = False
+
+    def fit_spec(self):
+        """Snapshot the owed maintenance as a batchable fit descriptor
+        (``repro.core.suggest.bayesopt.FitSpec``-shaped: bucket, steps,
+        arrays, a lane ``runner``, and an ``install(params, dt)``
+        callback applied under the optimizer lock), or None.  Only
+        meaningful when ``batchable_fits`` is True."""
+        return None
+
     def fit_job(self):
         """Snapshot the owed maintenance as a two-phase job for the
         shared fit executor: ``fit_job()`` is called under the service's

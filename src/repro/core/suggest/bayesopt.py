@@ -56,12 +56,65 @@ MAX_REFIT_EVERY = 64
 #: inter-arrival time) the deferred hyperfits may consume in pipeline mode.
 FIT_DUTY = 0.25
 
+#: Bounds of the live inducing-set budget ladder (ISSUE 8): the service
+#: feeds its sparse-vs-exact regret counters back through ``tune_sparse``,
+#: halving the subset while sparse quality tracks exact (cheaper refills)
+#: and doubling it when it drifts.  The *eligibility* threshold stays the
+#: class constant ``gp.SPARSE_MAX`` — tuning changes how much the sparse
+#: posterior costs, never when it may serve.
+SPARSE_MIN = 16
+SPARSE_LADDER_MAX = 2 * gp.SPARSE_MAX
+#: Relative slack on the sparse mean regret before the subset grows.
+SPARSE_TOL = 0.25
+#: Fresh finished-trial observations (per serving class) required between
+#: ladder moves — one burst can't walk the budget to a rail.
+SPARSE_TUNE_OBS = 8
+
+
+class FitSpec:
+    """Batchable deferred-fit descriptor (ISSUE 8) — what
+    ``Optimizer.fit_spec`` snapshots under the optimizer lock for the
+    shared FitExecutor.  Specs sharing ``(runner, bucket, steps)`` may be
+    co-batched into one vmap'd dispatch; ``install(params, fit_seconds)``
+    is called back under the optimizer lock, preserving the two-phase
+    no-mutation contract (compute never touches live state)."""
+    __slots__ = ("bucket", "steps", "x", "y", "params0", "install",
+                 "runner")
+
+    def __init__(self, bucket, steps, x, y, params0, install, runner):
+        self.bucket = int(bucket)
+        self.steps = int(steps)
+        self.x = x
+        self.y = y
+        self.params0 = params0
+        self.install = install
+        self.runner = runner
+
+
+def run_fit_lanes(specs: Sequence[FitSpec]):
+    """FitExecutor lane runner: fit every spec (all sharing one
+    (bucket, steps) group) in one ``gp.batched_fit`` dispatch — or the
+    ordinary ``fit_gp`` path for a single lane, so a lone refit reuses
+    the per-bucket ``_fit`` compiles ``prewarm`` already paid for.
+    Returns (list of fitted GPParams, total wall seconds)."""
+    t0 = time.perf_counter()
+    if len(specs) == 1:
+        s = specs[0]
+        post = gp.fit_gp(s.x, s.y, steps=s.steps, params0=s.params0,
+                         bucket=s.bucket)
+        out = [post.params]
+    else:
+        out = gp.batched_fit([(s.x, s.y, s.params0) for s in specs],
+                             steps=specs[0].steps, bucket=specs[0].bucket)
+    return out, time.perf_counter() - t0
+
 
 @register("gp")
 @register("bayesopt")
 class BayesOpt(Optimizer):
     expensive_ask = True        # service runs the prefetch pump for us
     speculative_ask = True      # honors ask(n, speculative=True)
+    batchable_fits = True       # fit_spec() descriptors may co-batch
 
     def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
                  candidates: int = 1024, fit_steps: int = 150,
@@ -104,6 +157,8 @@ class BayesOpt(Optimizer):
         self._sparse_rows = 0           # rows folded into _sparse_post
         self._sparse_m = 0              # subset size of the cached sparse
         self._sparse_asks = 0           # speculative points served sparse
+        self._sparse_max = gp.SPARSE_MAX  # live inducing-set budget
+        self._sparse_tune_mark = None   # quality counters at last tune
 
     # ------------------------------------------------- refit schedule
     def warm_steps(self) -> int:
@@ -154,7 +209,8 @@ class BayesOpt(Optimizer):
                 "fit_ms": ms(self._fit_ema),
                 "arrival_ms": ms(self._arrival_ema),
                 "sparse_asks": self._sparse_asks,
-                "sparse_m": self._sparse_m}
+                "sparse_m": self._sparse_m,
+                "sparse_max": self._sparse_max}
 
     # ------------------------------------------------------------------
     def prewarm(self, max_history: int, batch: int = 8) -> int:
@@ -261,15 +317,16 @@ class BayesOpt(Optimizer):
             return True
         return False
 
-    def fit_job(self):
-        """Snapshot the owed hyperparameter fit as a lock-free closure
-        (ISSUE 5): the caller invokes the returned ``run()`` WITHOUT
-        holding the optimizer lock — it is pure JAX compute over copied
-        arrays — and then applies the ``install()`` it returns under the
-        lock.  ``install`` only adopts the new hyperparameters and marks
-        a recondition; the next ``ask`` folds them together with any
-        observations that arrived mid-fit, so a request never waits
-        behind an Adam loop."""
+    def fit_spec(self) -> Optional[FitSpec]:
+        """Snapshot the owed hyperparameter fit as a batchable
+        ``FitSpec`` (ISSUE 8) — arrays copied under the caller's lock,
+        so the executor may run the fit (alone or co-batched with other
+        experiments sharing the (bucket, steps) group) with no lock
+        held.  ``spec.install(params, dt)`` must be called back under
+        the optimizer lock: it only adopts the new hyperparameters and
+        marks a recondition; the next ``ask`` folds them together with
+        any observations that arrived mid-fit, so a lane whose
+        experiment saw a mid-fit burst just re-arms."""
         if not self.maintenance_due():
             return None
         x = np.asarray(self._xs)
@@ -279,25 +336,40 @@ class BayesOpt(Optimizer):
         bucket = gp.bucket_size(len(x))
         n_snap = len(y)
 
+        def install(params, dt):
+            self._fit_ema = dt if self._fit_ema is None \
+                else 0.7 * self._fit_ema + 0.3 * dt
+            self._fits += 1
+            self._params = params
+            self._sparse_post = None
+            # observations that landed mid-fit stay counted as debt —
+            # and if they already exceed the period (a burst arrived
+            # during the fit), the next fit is owed immediately, else
+            # the MAX_REFIT_EVERY staleness bound would silently slip
+            self._since_fit = max(0, len(self._ys) - n_snap)
+            self._needs_fit = self._since_fit >= self.refit_period()
+            self._needs_recondition = True
+
+        return FitSpec(bucket=bucket, steps=steps, x=x, y=y,
+                       params0=params0, install=install,
+                       runner=run_fit_lanes)
+
+    def fit_job(self):
+        """Snapshot the owed hyperparameter fit as a lock-free closure
+        (ISSUE 5): the caller invokes the returned ``run()`` WITHOUT
+        holding the optimizer lock — it is pure JAX compute over copied
+        arrays — and then applies the ``install()`` it returns under the
+        lock.  Single-lane view of ``fit_spec`` (same snapshot, same
+        install semantics)."""
+        spec = self.fit_spec()
+        if spec is None:
+            return None
+
         def run():
-            t0 = time.perf_counter()
-            post = gp.fit_gp(x, y, steps=steps, params0=params0,
-                             bucket=bucket)
-            dt = time.perf_counter() - t0
+            out, dt = run_fit_lanes([spec])
 
             def install():
-                self._fit_ema = dt if self._fit_ema is None \
-                    else 0.7 * self._fit_ema + 0.3 * dt
-                self._fits += 1
-                self._params = post.params
-                self._sparse_post = None
-                # observations that landed mid-fit stay counted as debt —
-                # and if they already exceed the period (a burst arrived
-                # during the fit), the next fit is owed immediately, else
-                # the MAX_REFIT_EVERY staleness bound would silently slip
-                self._since_fit = max(0, len(self._ys) - n_snap)
-                self._needs_fit = self._since_fit >= self.refit_period()
-                self._needs_recondition = True
+                spec.install(out[0], dt)
             return install
         return run
 
@@ -351,12 +423,56 @@ class BayesOpt(Optimizer):
         return (self.defer_fits and self._params is not None
                 and len(self._ys) > gp.SPARSE_MAX)
 
+    def tune_sparse(self, quality: Dict[str, float]) -> Optional[int]:
+        """Feed the service's sparse-vs-exact quality counters (cumulative
+        finished-trial counts + summed instantaneous regret, maintained at
+        observe time) back into the live inducing-set budget — the PR 5
+        follow-up (ISSUE 8).  Compares the *windowed* mean regret since
+        the last ladder move: while sparse-served suggestions regret no
+        more than ``1+SPARSE_TOL`` times the exact-served ones (plus a
+        small absolute slack at the objective's scale), the subset halves
+        — cheaper refills at no measured quality cost; when it drifts
+        past the tolerance, it doubles back.  Moves one ladder step per
+        ``SPARSE_TUNE_OBS`` fresh observations of each class, clamped to
+        [SPARSE_MIN, SPARSE_LADDER_MAX].  Returns the new budget when it
+        changed, else None.  Call under the optimizer lock."""
+        s_n = int(quality.get("sparse_obs", 0) or 0)
+        s_r = float(quality.get("sparse_regret", 0.0) or 0.0)
+        e_n = int(quality.get("exact_obs", 0) or 0)
+        e_r = float(quality.get("exact_regret", 0.0) or 0.0)
+        if self._sparse_tune_mark is None:
+            self._sparse_tune_mark = (s_n, s_r, e_n, e_r)
+            return None
+        m_sn, m_sr, m_en, m_er = self._sparse_tune_mark
+        d_sn, d_en = s_n - m_sn, e_n - m_en
+        if d_sn < SPARSE_TUNE_OBS or d_en < SPARSE_TUNE_OBS:
+            return None
+        self._sparse_tune_mark = (s_n, s_r, e_n, e_r)
+        mean_s = (s_r - m_sr) / d_sn
+        mean_e = (e_r - m_er) / d_en
+        # absolute slack: regret means near zero (a converged experiment)
+        # must not read as drift from float dust — scale by the objective
+        slack = 0.05 * (float(np.std(self._ys)) if len(self._ys) > 1
+                        else 1.0)
+        cur = self._sparse_max
+        if mean_s <= mean_e * (1.0 + SPARSE_TOL) + slack:
+            new = max(SPARSE_MIN, cur // 2)
+        else:
+            new = min(SPARSE_LADDER_MAX, cur * 2)
+        if new == cur:
+            return None
+        self._sparse_max = new
+        self._sparse_post = None        # rebuild at the new budget
+        return new
+
     def _sparse_recondition(self, extra: int) -> None:
         """(Re)build the cached subset-of-data posterior at the current
         hyperparameters and fold the pending lies in — O(m³) with
-        m <= ``gp.SPARSE_MAX``, independent of history size."""
+        m <= the live ``_sparse_max`` budget, independent of history
+        size."""
         post, idx = gp.sparse_posterior(self._params, np.asarray(self._xs),
                                         np.asarray(self._ys),
+                                        m=self._sparse_max,
                                         extra=len(self._pending) + extra)
         for u in self._pending.values():
             post = gp.append_lie(post, np.asarray(u, np.float32))

@@ -42,7 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as _kops
+
 MIN_BUCKET = 16
+
+#: Cap on lanes per batched fit dispatch (``batched_fit``): beyond this
+#: the O(k·b³) Adam loop stops amortizing dispatch overhead and only
+#: grows compile variants; callers split larger sets into chunks.
+FIT_LANES_MAX = 32
 
 #: Cap on the subset-of-data design of the sparse speculative posterior.
 #: 64 keeps the sparse Cholesky inside the two smallest non-trivial shape
@@ -158,6 +165,113 @@ def _fit(params0: GPParams, x, y, mask, steps: int = 150, lr: float = 0.05):
         adam_step, (params0, zeros, zeros, jnp.zeros((), jnp.int32)),
         None, length=steps)
     return p
+
+
+def lane_pad(k: int) -> int:
+    """Smallest power of two >= k — the lane-count pad of ``batched_fit``
+    (one ``_fit_lanes`` compile per (bucket, steps, lane-pad) triple)."""
+    return 1 << max(0, int(k) - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _fit_lanes(params0: GPParams, x, y, mask, steps: int = 150,
+               lr: float = 0.05):
+    """Batched ``_fit``: every GPParams leaf and data array carries a
+    leading lane axis (k experiments), and one Adam loop advances all
+    lanes together — the per-lane gradients come from one batched
+    dispatch (``ops.gp_fit_grads``: the fused Pallas neg-MLL's analytic
+    custom_vjp on TPU, the GEMM-rich analytic adjoint from kernels/ref
+    here on CPU — the latter is why a lane costs less than a serial
+    autodiff fit even on one core).  Lanes are independent: the adjoint
+    is computed per lane, and the NaN-reject check is per-lane, so one
+    ill-conditioned experiment can't stall its batch peers.
+    All-zero-mask lanes (the lane padding) see an identity covariance —
+    zero gradient, parameters inert."""
+    def adam_step(carry, _):
+        p, m, v, t = carry
+        g = GPParams(*_kops.gp_fit_grads(p.log_ls, p.log_amp,
+                                         p.log_noise, x, y, mask))
+        t = t + 1
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + 0.1 * gg, m, g)
+        v = jax.tree.map(lambda vv, gg: 0.999 * vv + 0.001 * gg * gg, v, g)
+        mh = jax.tree.map(lambda mm: mm / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda vv: vv / (1 - 0.999 ** t), v)
+        p = jax.tree.map(lambda pp, mm, vv: pp - lr * mm / (jnp.sqrt(vv) + 1e-8),
+                         p, mh, vh)
+        p = GPParams(jnp.clip(p.log_ls, -3.0, 1.5),
+                     jnp.clip(p.log_amp, -3.0, 2.0),
+                     jnp.clip(p.log_noise, -5.0, 1.0))
+        ok = (jnp.all(jnp.isfinite(p.log_ls), axis=-1)
+              & jnp.isfinite(p.log_amp) & jnp.isfinite(p.log_noise))  # (k,)
+        prev = carry[0]
+        p = GPParams(jnp.where(ok[:, None], p.log_ls, prev.log_ls),
+                     jnp.where(ok, p.log_amp, prev.log_amp),
+                     jnp.where(ok, p.log_noise, prev.log_noise))
+        return (p, m, v, t), None
+
+    zeros = jax.tree.map(jnp.zeros_like, params0)
+    (p, _, _, _), _ = jax.lax.scan(
+        adam_step, (params0, zeros, zeros, jnp.zeros((), jnp.int32)),
+        None, length=steps)
+    return p
+
+
+def batched_fit(items, steps: int = 150,
+                bucket: Optional[int] = None) -> list:
+    """Fit k experiments' GP hyperparameters in ONE vmap'd dispatch.
+
+    ``items`` is a sequence of ``(x, y, params0)`` triples — x (n,d) in
+    the unit cube, y raw objective, params0 a warm start or None — all
+    sharing one shape ``bucket`` (default: smallest bucket fitting the
+    largest history).  Each lane is normalized and padded exactly as
+    ``fit_gp`` would, stacked along a leading lane axis, and the lane
+    count is padded to the next power of two with inert all-zero-mask
+    lanes, so XLA compiles once per (bucket, steps, lane-pad) triple.
+    Returns a list of k fitted ``GPParams`` (install with
+    ``make_posterior`` / the optimizer's recondition, as usual)."""
+    if not items:
+        return []
+    if len(items) > FIT_LANES_MAX:
+        raise ValueError(f"{len(items)} lanes > FIT_LANES_MAX "
+                         f"({FIT_LANES_MAX}); split the batch")
+    dtype = _dtype()
+    b = bucket if bucket is not None else bucket_size(
+        max(np.asarray(x).shape[0] for x, _, _ in items))
+    b = int(b)
+    d = np.asarray(items[0][0]).shape[1]
+    k = len(items)
+    kp = lane_pad(k)
+    # one host-side buffer per array and ONE device put each — k small
+    # transfers per lane would cost more than the fit at warm step counts
+    xs = np.zeros((kp, b, d), np.float64)
+    ys = np.zeros((kp, b), np.float64)
+    ms = np.zeros((kp, b), np.float64)
+    lls = np.full((kp, d), -0.7, np.float64)
+    las = np.zeros((kp,), np.float64)
+    lns = np.full((kp,), -2.0, np.float64)
+    for i, (x, y, params0) in enumerate(items):
+        x = np.asarray(x, np.float64)
+        y_raw = np.asarray(y, np.float64)
+        n = x.shape[0]
+        if b < n:
+            raise ValueError(f"bucket {b} smaller than training set {n}")
+        mean = np.mean(y_raw)
+        std = max(float(np.std(y_raw)), 1e-6)
+        xs[i, :n] = x
+        ys[i, :n] = (y_raw - mean) / std
+        ms[i, :n] = 1.0
+        if params0 is not None:
+            lls[i] = np.asarray(params0.log_ls)
+            las[i] = np.asarray(params0.log_amp)
+            lns[i] = np.asarray(params0.log_noise)
+    # lanes k..kp-1 stay all-zero-mask (inert) with default params
+    p0 = GPParams(jnp.asarray(lls, dtype), jnp.asarray(las, dtype),
+                  jnp.asarray(lns, dtype))
+    p = _fit_lanes(p0, jnp.asarray(xs, dtype), jnp.asarray(ys, dtype),
+                   jnp.asarray(ms, dtype), steps=steps)
+    jax.block_until_ready(p.log_ls)
+    return [GPParams(p.log_ls[i], p.log_amp[i], p.log_noise[i])
+            for i in range(k)]
 
 
 @jax.jit
@@ -276,7 +390,7 @@ def sparse_posterior(params: GPParams, x: np.ndarray, y: np.ndarray,
 
 # ---------------------------------------------------------------- prewarm
 def prewarm_bucket(d: int, bucket: int, fit_steps=(), k_pads=(),
-                   n_cand: int = 64) -> None:
+                   n_cand: int = 64, fit_lanes=()) -> None:
     """Compile every jitted kernel on the ask path for one bucket shape,
     using throwaway data: the hyperparameter fit (one ``_fit`` variant per
     entry in ``fit_steps``), the exact posterior, the rank-1 appends, and
@@ -286,13 +400,23 @@ def prewarm_bucket(d: int, bucket: int, fit_steps=(), k_pads=(),
     cost (~0.7 s per bucket on the dev container) out of ``ask`` — the
     dominant term in the cold `gp/h10` and bucket-crossing `gp_batch8`
     latencies.  Idempotent: re-running against warm caches costs only the
-    (small) dummy-data compute."""
+    (small) dummy-data compute.
+
+    ``fit_lanes`` is the k-pad ladder of the batched executor path
+    (ISSUE 8): for each lane count the ``_fit_lanes`` variant is
+    compiled at every ``fit_steps`` entry, so a fleet's first batched
+    refit dispatch doesn't pay its (bucket, steps, lane-pad) compile
+    under load.  Off by default — batched dispatches already run off
+    the request path, so lazy first-touch compiles only delay one
+    install."""
     x = np.zeros((2, d), np.float64)
     x[1] = 0.5
     y = np.array([0.0, 1.0], np.float64)
     post = None
     for s in sorted({int(s) for s in fit_steps}):
         post = fit_gp(x, y, steps=s, bucket=bucket)
+        for lanes in sorted({lane_pad(int(kp)) for kp in fit_lanes}):
+            batched_fit([(x, y, None)] * lanes, steps=s, bucket=bucket)
     if post is None:
         post = make_posterior(
             GPParams(jnp.zeros(d, _dtype()), jnp.zeros(()), jnp.zeros(())),

@@ -1,0 +1,283 @@
+"""Pallas TPU kernels for the batched GP fit path (ISSUE 8).
+
+Two kernels, both with a *lane* (= experiment) grid axis so k same-bucket
+experiments run in one dispatch:
+
+* ``gp_nll`` — masked batched negative log marginal likelihood: the
+  covariance build, Cholesky factorization, triangular solve, and logdet
+  are fused into ONE kernel per lane.  The Cholesky is a right-looking
+  rank-1 update loop expressed entirely in ops Pallas can lower on TPU
+  (dot / where / broadcasted_iota / reductions — no lax.linalg inside the
+  kernel); identity-padding rows are masked in-kernel, so a lane's value
+  is independent of its bucket's padding.  Gradients come from a
+  ``custom_vjp``: the forward kernel also emits its (L, z) residuals and
+  the backward pass is the *analytic* adjoint tr(S·∂K/∂θ) with
+  S = ½(K⁻¹ − αα') in plain jnp — cheaper than autodiff through a
+  Cholesky, and shared by the TPU and interpret paths.
+
+* ``gp_ei`` — batched expected improvement: per lane, the cross
+  covariance, the forward triangular solve for the predictive variance,
+  and the EI closed form run fused over the candidate pool.
+
+The TPU Cholesky loop: at step j, with e_j the one-hot column,
+``col = A e_j`` is column j of the trailing matrix, ``l = col/√(A_jj)``
+masked to rows ≥ j is column j of L, and ``A ← A − l l'`` performs the
+rank-1 trailing update.  Masked (padded) rows hold an identity block in
+A, so they factor to e_j columns with unit diagonal — log det and the
+quadratic form see exactly the real rows.
+
+Gradient cotangents are exact for the hyperparameters and y; ``x`` and
+``mask`` cotangents are zero (the fit loop never differentiates them).
+
+CPU callers go through ``ops.gp_neg_mll`` / ``ops.gp_ei`` which dispatch
+to the jnp oracles in ``ref.py`` instead; these kernels run under
+``interpret=True`` only in tests (parity vs ref, atol 1e-5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LOG_2PI = 1.8378770664093453
+
+
+def _eye(b):
+    rows = jax.lax.broadcasted_iota(jnp.int32, (b, b), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, b), 1)
+    return (rows == cols).astype(jnp.float32)
+
+
+def _masked_cov_block(ll, la, ln, x, m, b):
+    """Masked Matérn-5/2 covariance for one lane — identical math to
+    ``core.suggest.gp._masked_cov`` (pinned by parity tests)."""
+    ls = jnp.exp(ll)                               # (d,)
+    amp2 = jnp.exp(2.0 * la)
+    noise2 = jnp.exp(2.0 * ln) + 1e-5
+    xs = x / ls[None, :]                           # (b,d)
+    s = jnp.sum(xs * xs, axis=1, keepdims=True)    # (b,1)
+    sq = jnp.maximum(
+        s - 2.0 * jnp.dot(xs, xs.T, preferred_element_type=jnp.float32)
+        + s.T, 0.0)
+    r = jnp.sqrt(sq + 1e-12)
+    s5r = jnp.sqrt(5.0) * r
+    k = amp2 * (1.0 + s5r + (5.0 / 3.0) * r * r) * jnp.exp(-s5r)
+    eye = _eye(b)
+    k = k + noise2 * eye
+    mm = m * m.T                                   # (b,b)
+    return k * mm + eye * (1.0 - m), eye
+
+
+def _chol_loop(K, b):
+    """Right-looking Cholesky via b one-hot rank-1 updates (TPU-lowerable:
+    dot / where / iota only).  Returns lower-triangular L."""
+    idx = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+
+    def step(j, carry):
+        A, L = carry
+        ej = (idx == j).astype(jnp.float32)                       # (b,1)
+        col = jnp.dot(A, ej, preferred_element_type=jnp.float32)  # (b,1)
+        dj = jnp.maximum(jnp.sum(col * ej), 1e-10)
+        l = jnp.where(idx >= j, col / jnp.sqrt(dj), 0.0)
+        L = L + jnp.dot(l, ej.T, preferred_element_type=jnp.float32)
+        A = A - jnp.dot(l, l.T, preferred_element_type=jnp.float32)
+        return A, L
+
+    _, L = jax.lax.fori_loop(0, b, step, (K, jnp.zeros_like(K)))
+    return L, idx
+
+
+def _fwd_solve(L, rhs, idx, b):
+    """Forward substitution z = L^{-1} rhs for a (b,m) right-hand side,
+    one one-hot masked step per row."""
+    diag = jnp.sum(L * _eye(b), axis=1, keepdims=True)            # (b,1)
+
+    def step(j, carry):
+        z, acc = carry
+        ej = (idx == j).astype(jnp.float32)                       # (b,1)
+        ljj = jnp.sum(diag * ej)
+        row = jnp.sum(ej * (rhs - acc), axis=0, keepdims=True) / ljj
+        z = z + jnp.dot(ej, row, preferred_element_type=jnp.float32)
+        acc = acc + jnp.dot(
+            jnp.dot(L, ej, preferred_element_type=jnp.float32), row,
+            preferred_element_type=jnp.float32)
+        return z, acc
+
+    z, _ = jax.lax.fori_loop(
+        0, b, step, (jnp.zeros_like(rhs), jnp.zeros_like(rhs)))
+    return z, diag
+
+
+# ------------------------------------------------------------------ NLL
+def _nll_kernel(ll_ref, la_ref, ln_ref, x_ref, y_ref, m_ref,
+                nll_ref, chol_ref, z_ref, *, b: int):
+    m = m_ref[0, :].reshape(b, 1)
+    K, _ = _masked_cov_block(ll_ref[0, :], la_ref[0, 0], ln_ref[0, 0],
+                             x_ref[0], m, b)
+    L, idx = _chol_loop(K, b)
+    ym = y_ref[0, :].reshape(b, 1) * m
+    z, diag = _fwd_solve(L, ym, idx, b)
+    nll_ref[0, 0] = (0.5 * jnp.sum(z * z) + jnp.sum(jnp.log(diag))
+                     + 0.5 * jnp.sum(m) * _LOG_2PI)
+    chol_ref[0] = L
+    z_ref[0, :] = z[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gp_nll_chol(log_ls, log_amp, log_noise, x, y, mask, *,
+                interpret: bool = False):
+    """Fused batched NLL; also returns the (chol, z) residuals the
+    analytic backward pass reuses.  Shapes as in ``ref.gp_nll_ref``."""
+    k, b, d = x.shape
+    f32 = jnp.float32
+    nll, chol, z = pl.pallas_call(
+        functools.partial(_nll_kernel, b=b),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1), f32),
+            jax.ShapeDtypeStruct((k, b, b), f32),
+            jax.ShapeDtypeStruct((k, b), f32),
+        ],
+        interpret=interpret,
+    )(log_ls.astype(f32), log_amp.astype(f32).reshape(k, 1),
+      log_noise.astype(f32).reshape(k, 1), x.astype(f32),
+      y.astype(f32), mask.astype(f32))
+    return nll[:, 0], chol, z
+
+
+def _nll_bwd_lane(ll, la, ln, xs, ms, L, z, g):
+    """Analytic per-lane NLL gradient: dNLL/dθ = tr(S·∂K/∂θ) with
+    S = ½(K⁻¹ − αα'), α = L⁻ᵀz — plain jnp, shared by TPU + interpret."""
+    b = xs.shape[0]
+    ls = jnp.exp(ll)
+    amp2 = jnp.exp(2.0 * la)
+    alpha = jax.scipy.linalg.solve_triangular(L, z, lower=True, trans=1)
+    linv = jax.scipy.linalg.solve_triangular(L, jnp.eye(b), lower=True)
+    S = 0.5 * (linv.T @ linv - jnp.outer(alpha, alpha))
+    mm = ms[:, None] * ms[None, :]
+    smm = S * mm
+    diff = xs[:, None, :] - xs[None, :, :]          # (b,b,d)
+    sq_k = (diff / ls) ** 2
+    r = jnp.sqrt(jnp.maximum(jnp.sum(sq_k, -1), 0.0) + 1e-12)
+    s5r = jnp.sqrt(5.0) * r
+    e = jnp.exp(-s5r)
+    mat = amp2 * (1.0 + s5r + (5.0 / 3.0) * r * r) * e
+    # ∂k/∂log_ls_k = amp2·(5/3)(1+√5r)e^{−√5r}·d_k²/ls_k²
+    coeff = amp2 * (5.0 / 3.0) * (1.0 + s5r) * e
+    g_ll = g * jnp.einsum("ij,ij,ijk->k", smm, coeff, sq_k)
+    g_la = g * 2.0 * jnp.sum(smm * mat)
+    g_ln = g * 2.0 * jnp.exp(2.0 * ln) * jnp.sum(jnp.diagonal(S) * ms)
+    g_y = g * (alpha * ms)                          # dNLL/dy = K⁻¹(y·m)·m
+    return g_ll, g_la, g_ln, g_y
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _gp_nll(log_ls, log_amp, log_noise, x, y, mask, interpret):
+    nll, _, _ = gp_nll_chol(log_ls, log_amp, log_noise, x, y, mask,
+                            interpret=interpret)
+    return nll
+
+
+def _gp_nll_fwd(log_ls, log_amp, log_noise, x, y, mask, interpret):
+    nll, chol, z = gp_nll_chol(log_ls, log_amp, log_noise, x, y, mask,
+                               interpret=interpret)
+    return nll, (log_ls, log_amp, log_noise, x, mask, chol, z)
+
+
+def _gp_nll_bwd(interpret, res, g):
+    log_ls, log_amp, log_noise, x, mask, chol, z = res
+    g_ll, g_la, g_ln, g_y = jax.vmap(_nll_bwd_lane)(
+        log_ls.astype(jnp.float32), log_amp.astype(jnp.float32),
+        log_noise.astype(jnp.float32), x.astype(jnp.float32),
+        mask.astype(jnp.float32), chol, z, g.astype(jnp.float32))
+    return (g_ll, g_la, g_ln, jnp.zeros_like(x), g_y,
+            jnp.zeros_like(mask))
+
+
+_gp_nll.defvjp(_gp_nll_fwd, _gp_nll_bwd)
+
+
+def gp_nll(log_ls, log_amp, log_noise, x, y, mask, *,
+           interpret: bool = False):
+    """Batched masked neg-MLL, Pallas-fused forward + analytic backward.
+    Hyperparameter and y cotangents are exact; x/mask cotangents are
+    zeros (the fit loop never differentiates them)."""
+    return _gp_nll(log_ls, log_amp, log_noise, x, y, mask, interpret)
+
+
+# ------------------------------------------------------------------- EI
+def _ei_kernel(ll_ref, la_ref, x_ref, m_ref, L_ref, a_ref, ymn_ref,
+               ystd_ref, cand_ref, best_ref, ei_ref, *, b: int, xi: float):
+    ls = jnp.exp(ll_ref[0, :])
+    amp2 = jnp.exp(2.0 * la_ref[0, 0])
+    m = m_ref[0, :].reshape(b, 1)
+    xs = x_ref[0] / ls[None, :]                    # (b,d)
+    cq = cand_ref[0] / ls[None, :]                 # (mc,d)
+    sq = jnp.maximum(
+        jnp.sum(cq * cq, axis=1, keepdims=True)
+        - 2.0 * jnp.dot(cq, xs.T, preferred_element_type=jnp.float32)
+        + jnp.sum(xs * xs, axis=1, keepdims=True).T, 0.0)
+    r = jnp.sqrt(sq + 1e-12)
+    s5r = jnp.sqrt(5.0) * r
+    kq = amp2 * (1.0 + s5r + (5.0 / 3.0) * r * r) * jnp.exp(-s5r) * m.T
+    alpha = a_ref[0, :].reshape(b, 1)
+    mu = jnp.dot(kq, alpha, preferred_element_type=jnp.float32)  # (mc,1)
+    L = L_ref[0]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    v, _ = _fwd_solve(L, kq.T, idx, b)             # (b,mc)
+    var = jnp.maximum(amp2 - jnp.sum(v * v, axis=0, keepdims=True), 1e-12)
+    ystd = ystd_ref[0, 0]
+    mu = mu * ystd + ymn_ref[0, 0]
+    sd = jnp.sqrt(var).T * ystd                    # (mc,1)
+    z = (mu - best_ref[0, 0] - xi) / sd
+    ncdf = 0.5 * (1.0 + jax.lax.erf(z / jnp.sqrt(2.0)))
+    npdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2.0 * jnp.pi)
+    ei_ref[0, :] = ((mu - best_ref[0, 0] - xi) * ncdf + sd * npdf)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("xi", "interpret"))
+def gp_ei(log_ls, log_amp, x, mask, chol, alpha, y_mean, y_std,
+          cand, best, *, xi: float = 0.01, interpret: bool = False):
+    """Fused batched EI over per-lane posteriors; shapes as in
+    ``ref.gp_ei_ref`` -> ei (k,m) in raw y units."""
+    k, b, d = x.shape
+    mc = cand.shape[1]
+    f32 = jnp.float32
+    col = lambda a: a.astype(f32).reshape(k, 1)
+    ei = pl.pallas_call(
+        functools.partial(_ei_kernel, b=b, xi=float(xi)),
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, mc, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, mc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, mc), f32),
+        interpret=interpret,
+    )(log_ls.astype(f32), col(log_amp), x.astype(f32), mask.astype(f32),
+      chol.astype(f32), alpha.astype(f32), col(y_mean), col(y_std),
+      cand.astype(f32), col(best))
+    return ei
