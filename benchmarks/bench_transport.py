@@ -1,0 +1,119 @@
+"""Transport-plane benchmarks: the batched wire protocol's hot path.
+
+Rows (wired into ``benchmarks/run.py collect()``, gated by
+``scripts/bench_check.py``):
+
+* ``bench_transport/observe_stream/c8`` — 8 workers streaming
+  fire-and-forget observes through write-behind ``HTTPClient(batch=True)``
+  clients against one service process; amortized µs per observe.
+* ``bench_transport/report_http`` — one trial-events loop streaming
+  reports through a batched client (same early-stop config as
+  ``bench_service/report_http``, so the two rows are directly
+  comparable); amortized µs per report.  Rung-crossing reports block for
+  their real decision; the below-rung majority rides the batch.
+
+Both rows measure *chunks* (elapsed / chunk size), not single calls —
+an enqueue alone would measure a dict append; the chunk includes the
+flushes the stream actually pays.
+"""
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from repro.api import CreateExperiment, HTTPClient, serve_api
+from repro.api.protocol import ObserveRequest, ReportRequest
+from repro.core.experiment import ExperimentConfig
+from repro.core.space import Param, Space
+
+
+def _space():
+    return Space([Param("x", "double", 0.0, 1.0)])
+
+
+def run_observe_stream(c=8, per=200, chunk=25):
+    """[(row, us_samples)] — concurrent batched observe streams."""
+    server = serve_api(tempfile.mkdtemp()).start()
+    samples, lock = [], threading.Lock()
+    try:
+        cfg = ExperimentConfig(name="bench-obs", budget=c * per + 64,
+                               parallel=c, optimizer="random",
+                               space=_space())
+        boot = HTTPClient(server.url)
+        exp = boot.create_experiment(
+            CreateExperiment(config=cfg.to_json())).exp_id
+        boot.close()
+        barrier = threading.Barrier(c)
+
+        def worker(w):
+            client = HTTPClient(server.url, batch=True)
+            rng = np.random.default_rng(w)
+            client.status(exp)          # keep-alive + queue drain warm
+            barrier.wait()
+            got = []
+            for base in range(0, per, chunk):
+                t0 = time.perf_counter()
+                for j in range(base, min(base + chunk, per)):
+                    client.observe(ObserveRequest(
+                        exp, f"w{w}-s{j:05d}", {"x": float(rng.uniform())},
+                        float(rng.normal())))
+                client.flush()
+                got.append((time.perf_counter() - t0) / chunk * 1e6)
+            client.close()
+            with lock:
+                samples.extend(got)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(c)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        server.shutdown()
+    return [(f"observe_stream/c{c}", samples)]
+
+
+def run_report_stream(n=400, chunk=50):
+    """[(row, us_samples)] — batched trial-events stream (cf. the
+    unbatched ``bench_service/report_http`` row)."""
+    server = serve_api(tempfile.mkdtemp()).start()
+    try:
+        client = HTTPClient(server.url, batch=True)
+        exp = client.create_experiment(CreateExperiment(
+            config=ExperimentConfig(
+                name="bench-report", budget=10, parallel=1,
+                optimizer="random", space=_space(),
+                early_stop={"min_steps": 1, "eta": 3}).to_json())).exp_id
+        client.report(ReportRequest(exp, "t0001", 1, 0.5))       # warm
+        samples = []
+        for base in range(0, n, chunk):
+            t0 = time.perf_counter()
+            for i in range(base, min(base + chunk, n)):
+                client.report(ReportRequest(exp, "t0001", 2 + i, 0.5))
+            client.flush()
+            samples.append((time.perf_counter() - t0) / chunk * 1e6)
+        client.close()
+    finally:
+        server.shutdown()
+    return [("report_http", samples)]
+
+
+def run(quick=False):
+    rows = []
+    rows.extend(run_observe_stream(per=100 if quick else 200))
+    rows.extend(run_report_stream(n=200 if quick else 400))
+    return rows
+
+
+def main():
+    med = lambda s: float(np.percentile(s, 50))      # noqa: E731
+    print("# batched transport plane (p50 of chunk-amortized samples)")
+    print("row,us_per_op")
+    for suffix, us in run():
+        print(f"bench_transport/{suffix},{med(us):.1f}")
+
+
+if __name__ == "__main__":
+    main()

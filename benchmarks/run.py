@@ -103,6 +103,11 @@ def collect(quick: bool = False) -> dict:
         # tail during a live shard-add rebalance is the row's point, so
         # commit the p90
         _reduce(rows, stats, f"bench_fleet/{suffix}", us, gate="p90")
+    from benchmarks import bench_transport
+    for suffix, us in bench_transport.run(quick=quick):
+        # chunk-amortized stream rows: the p50 chunk is the steady state
+        # (a min chunk would just be one that dodged every flush)
+        _reduce(rows, stats, f"bench_transport/{suffix}", us, gate="p50")
     from benchmarks import bench_fit
     for suffix, us in bench_fit.run(quick=quick):
         # serial vs batched cross-experiment hyperfit cost (ISSUE 8):

@@ -34,7 +34,7 @@ import time
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 GATED_PREFIXES = ("bench_suggest/gp", "bench_service/", "bench_fleet/",
-                  "bench_fit/")
+                  "bench_fit/", "bench_transport/")
 # Reported but never gated: the synchronous (prefetch=0) row is the
 # deliberately-slow pre-pipeline reference, not a served path; the
 # rebalance row tracks the suggest tail during a live shard-add handover

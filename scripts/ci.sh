@@ -23,8 +23,11 @@ REPRO_CONTENTION=1 python -m pytest -q -m contention \
 
 echo "== tier-2: chaos fault-injection tests =="
 # deterministic seeded fault plans (partition/heal/rebalance/failover);
-# fencing invariants must hold under every interleaving
-REPRO_CHAOS=1 python -m pytest -q -m chaos tests/test_fencing.py
+# fencing invariants must hold under every interleaving — plus the
+# transport plane's exactly-once batch replay under injected
+# mid-response connection kills
+REPRO_CHAOS=1 python -m pytest -q -m chaos \
+    tests/test_fencing.py tests/test_transport.py
 
 echo "== tier-2: perf gate =="
 # --strict: a quick-sweep row missing from the committed BENCH_suggest.json

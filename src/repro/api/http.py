@@ -18,6 +18,7 @@ Endpoint map (full schemas in API.md):
   POST /v1/experiments/{id}/drain               drain (fleet handover)
   POST /v1/experiments/{id}/stop                stop      {state}
   GET  /v1/experiments/{id}/best                best
+  POST /v1/batch                                batched ops (transport plane)
   GET  /v1/healthz                              liveness
   GET  /v1/load                                 shard load (fleet admission)
 """
@@ -26,6 +27,7 @@ from __future__ import annotations
 import http.client
 import json
 import random
+import socket
 import threading
 import time
 import urllib.parse
@@ -34,7 +36,8 @@ from typing import Callable, Optional, Tuple, Union
 
 from repro.api.client import SuggestionClient
 from repro.api.local import LocalClient
-from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
+from repro.api.protocol import (ApiError, BatchRequest, BatchResponse,
+                                BestResponse, CreateExperiment,
                                 CreateResponse, Decision, DrainRequest,
                                 DrainResponse, E_BAD_REQUEST,
                                 E_INTERNAL, ObserveRequest, ObserveResponse,
@@ -42,6 +45,9 @@ from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 ReleaseResponse, ReportRequest,
                                 RequeueRequest, StatusResponse, StopRequest,
                                 SuggestBatch, SuggestRequest)
+from repro.api.transport import (FLUSH_DEADLINE_S, FLUSH_MAX_OPS,
+                                 DecisionGate, OP_OBSERVE, OP_RELEASE,
+                                 OP_REPORT, WriteBehind)
 from repro.core.store import Store
 
 
@@ -54,6 +60,8 @@ def _parse_path(path: str):
         return None, "healthz", None
     if parts == ["v1", "load"]:
         return None, "load", None
+    if parts == ["v1", "batch"]:
+        return None, "batch", None
     if not parts or parts[0] != "v1" or len(parts) < 2 \
             or parts[1] != "experiments" or len(parts) > 6:
         raise ApiError(E_BAD_REQUEST, f"no route for {path!r}")
@@ -71,6 +79,12 @@ def _parse_path(path: str):
 
 class _Handler(BaseHTTPRequestHandler):
     protocol_version = "HTTP/1.1"
+    # The response is written as two segments (headers, then body).  With
+    # Nagle on, the second small write sits in the kernel until the
+    # client's *delayed ACK* (~40 ms) releases it — which was the entire
+    # observed cost of the small-RPC hot path (report p50 ≈ 43 ms).
+    # TCP_NODELAY ships both segments immediately.
+    disable_nagle_algorithm = True
     backend: LocalClient = None           # set by serve_api
 
     # silence per-request stderr lines
@@ -124,6 +138,12 @@ class _Handler(BaseHTTPRequestHandler):
             # shard saturation snapshot — the fleet manager's admission-
             # control probe (FitExecutor backlog + duty cycle)
             return b.load()
+        if action == "batch":
+            # transport plane: one POST carries an ordered op batch; the
+            # backend applies it grouped per experiment (one lock
+            # acquisition per group) with exactly-once replay by batch_id
+            return b.apply_batch(
+                BatchRequest.from_json(self._read_body())).to_json()
         if method == "POST" and exp_id is None and action is None:
             req = CreateExperiment.from_json(self._read_body())
             return b.create_experiment(req).to_json()
@@ -239,14 +259,25 @@ class HTTPClient(SuggestionClient):
     ``fault_gate`` (chaos harness, ``core.faults.FaultPlan.edge_gate``)
     is consulted before every attempt and raises ``InjectedPartition``
     — a ``ConnectionRefusedError`` — so injected faults exercise these
-    exact retry paths."""
+    exact retry paths.
+
+    ``batch=True`` turns on the write-behind transport plane (API.md
+    §Transport batching): observe/release become fire-and-forget
+    enqueues, reports ride unless they can cross an ASHA rung
+    (:class:`DecisionGate`), and any blocking verb first drains the
+    queue.  Batches POST ``/v1/batch`` as idempotent requests — the
+    backoff machinery above retries whole batches by ``batch_id`` and
+    the server's dedupe window makes redelivery exactly-once."""
 
     def __init__(self, base_url: str, timeout: float = 30.0,
                  retry_attempts: int = RETRY_ATTEMPTS,
                  retry_base: float = RETRY_BASE_S,
                  retry_cap: float = RETRY_CAP_S,
                  retry_seed: Optional[int] = None,
-                 fault_gate: Optional[Callable[[], None]] = None):
+                 fault_gate: Optional[Callable[[], None]] = None,
+                 batch: bool = False,
+                 batch_max: int = FLUSH_MAX_OPS,
+                 batch_deadline: float = FLUSH_DEADLINE_S):
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
         u = urllib.parse.urlsplit(self.base_url)
@@ -269,6 +300,14 @@ class HTTPClient(SuggestionClient):
                       "backoff_ms": 0.0,  # total time slept
                       "refused": 0,      # connection-refused failures seen
                       "gave_up": 0}      # requests failed after all attempts
+        self._wb: Optional[WriteBehind] = None
+        self._gate: Optional[DecisionGate] = None
+        if batch:
+            self._gate = DecisionGate()
+            self._wb = WriteBehind(self._send_batch, max_ops=batch_max,
+                                   deadline=batch_deadline,
+                                   on_result=self._on_batch_result,
+                                   name=f"wb-{self._host}:{self._port}")
 
     def _backoff(self, attempt: int) -> None:
         """Full-jitter sleep before retry ``attempt`` (0-based)."""
@@ -305,7 +344,10 @@ class HTTPClient(SuggestionClient):
                 pass
 
     def close(self) -> None:
-        """Close this thread's persistent connection (idempotent)."""
+        """Flush any write-behind queue, then close this thread's
+        persistent connection (idempotent)."""
+        if self._wb is not None:
+            self._wb.close()
         self._drop_conn()
 
     def _call(self, method: str, path: str, payload: Optional[dict] = None,
@@ -320,6 +362,14 @@ class HTTPClient(SuggestionClient):
                 if self.fault_gate is not None:
                     self.fault_gate()
                 conn.request(method, url, body=body, headers=headers)
+                if fresh and conn.sock is not None:
+                    # belt-and-braces to the server-side Nagle disable:
+                    # never let a small client segment wait on delayed ACK
+                    try:
+                        conn.sock.setsockopt(socket.IPPROTO_TCP,
+                                             socket.TCP_NODELAY, 1)
+                    except OSError:
+                        pass
             except (http.client.HTTPException, ConnectionError, OSError) as e:
                 # send-phase failure: the socket rejected the write, so
                 # the server never processed the request — safe to
@@ -370,17 +420,54 @@ class HTTPClient(SuggestionClient):
                                    f"HTTP {status} from {self.base_url}{path}")
             return json.loads(raw or b"{}")
 
+    # ------------------------------------------------------------- batching
+    def _send_batch(self, lane, req: BatchRequest) -> BatchResponse:
+        """WriteBehind transport: batches are idempotent by ``batch_id``
+        (server dedupe window), so the full retry machinery — including
+        ambiguous response-phase failures — may resend them whole."""
+        return BatchResponse.from_json(
+            self._call("POST", "/v1/batch", req.to_json()))
+
+    def apply_batch(self, req: BatchRequest) -> BatchResponse:
+        """Ship one pre-built batch (the ``FleetClient`` per-shard path
+        uses this directly on HTTP shard transports)."""
+        return self._send_batch(None, req)
+
+    def _on_batch_result(self, lane, op, result, err) -> bool:
+        if err is None and op.kind == OP_REPORT and self._gate is not None:
+            # feed the decision cache so future reports from this trial
+            # know their next rung (and stash any stop/pause for the
+            # trial's next report)
+            p = op.payload
+            self._gate.note((p.get("exp_id"),
+                             p.get("suggestion_id") or p.get("trial_id")),
+                            Decision.from_json(result.result))
+        return False    # default accounting for failures
+
+    def flush(self) -> None:
+        """Drain the write-behind queue (no-op when batching is off)."""
+        if self._wb is not None:
+            self._wb.flush()
+
     # -------------------------------------------------------------- protocol
     def create_experiment(self, req: CreateExperiment) -> CreateResponse:
+        self.flush()
         return CreateResponse.from_json(
             self._call("POST", "/v1/experiments", req.to_json()))
 
     def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
+        self.flush()
         return SuggestBatch.from_json(
             self._call("POST", f"/v1/experiments/{exp_id}/suggestions",
                        {"count": count}, idempotent=False))
 
     def observe(self, req: ObserveRequest) -> ObserveResponse:
+        if self._wb is not None:
+            # fire-and-forget: the synthetic ack stands in for the wire
+            # response; duplicates are resolved server-side on flush
+            self._wb.enqueue(OP_OBSERVE, req.to_json())
+            return ObserveResponse(accepted=True, duplicate=False,
+                                   observations=-1)
         return ObserveResponse.from_json(
             self._call("POST",
                        f"/v1/experiments/{req.exp_id}/observations",
@@ -392,19 +479,37 @@ class HTTPClient(SuggestionClient):
         # trial), so the keep-alive retry path stays enabled.  Reuses the
         # persistent connection: the trial-events hot path pays no TCP
         # handshake per report.
-        return Decision.from_json(
+        if self._wb is not None:
+            stashed = self._gate.take_stashed(req)
+            if stashed is not None:
+                return stashed      # stop/pause that arrived on a batch
+            if not self._gate.blocking(req):
+                self._wb.enqueue(OP_REPORT, req.to_json())
+                return self._gate.ride_decision(req)
+            self._wb.flush()        # ordering: queued ops land first
+        d = Decision.from_json(
             self._call("POST",
                        f"/v1/experiments/{req.exp_id}/trials"
                        f"/{req.trial_id or req.suggestion_id}/report",
                        req.to_json()))
+        if self._gate is not None:
+            self._gate.note(self._gate.key(req), d)
+            self._gate.take_stashed(req)    # delivered directly: unstash
+        return d
 
     def release(self, exp_id: str, suggestion_id: str) -> bool:
+        if self._wb is not None:
+            self._wb.enqueue(OP_RELEASE,
+                             {"exp_id": exp_id,
+                              "suggestion_id": suggestion_id})
+            return True
         resp = self._call("POST", f"/v1/experiments/{exp_id}/release",
                           {"suggestion_id": suggestion_id})
         return ReleaseResponse.from_json(resp).released
 
     def requeue(self, exp_id: str, suggestion_id: str,
                 assignment: Optional[dict] = None) -> bool:
+        self.flush()
         resp = self._call("POST", f"/v1/experiments/{exp_id}/requeue",
                           {"suggestion_id": suggestion_id,
                            "assignment": assignment})
@@ -413,6 +518,7 @@ class HTTPClient(SuggestionClient):
     def drain(self, exp_id: str) -> DrainResponse:
         """Quiesce the experiment on the serving shard ahead of a
         handover (``POST .../drain``) — fleet rebalance control plane."""
+        self.flush()
         return DrainResponse.from_json(
             self._call("POST", f"/v1/experiments/{exp_id}/drain", {}))
 
@@ -422,20 +528,26 @@ class HTTPClient(SuggestionClient):
         return self._call("GET", "/v1/load")
 
     def status(self, exp_id: str) -> StatusResponse:
+        self.flush()
         resp = StatusResponse.from_json(
             self._call("GET", f"/v1/experiments/{exp_id}"))
         # additive client-side view: this client's transport retry
         # counters ride along so harnesses can assert retry behavior
         with self._stats_lock:
             resp.transport = dict(self.stats)
+        if self._wb is not None:
+            resp.transport["batch"] = dict(self._wb.stats)
+            resp.transport["batch"]["depth"] = self._wb.depth()
         return resp
 
     def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
+        self.flush()
         return StatusResponse.from_json(
             self._call("POST", f"/v1/experiments/{exp_id}/stop",
                        {"state": state}))
 
     def best_response(self, exp_id: str) -> BestResponse:
+        self.flush()
         return BestResponse.from_json(
             self._call("GET", f"/v1/experiments/{exp_id}/best"))
 

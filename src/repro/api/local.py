@@ -44,12 +44,15 @@ from repro.api.client import SuggestionClient
 from repro.api.pipeline import (MissSlot, PrefetchItem, SuggestionPump,
                                 drain_ops, pop_prefetched, retire_queue,
                                 serve_misses)
-from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
-                                CreateResponse, DECISION_STOP, Decision,
-                                DrainResponse, E_FENCED,
-                                E_UNKNOWN_EXPERIMENT, E_WRONG_SHARD,
-                                EPOCH_ZERO, ObserveRequest, ObserveResponse,
-                                ReportRequest, StatusResponse, SuggestBatch,
+from repro.api.protocol import (ApiError, BatchOpResult, BatchRequest,
+                                BatchResponse, BestResponse,
+                                CreateExperiment, CreateResponse,
+                                DECISION_STOP, Decision, DrainResponse,
+                                E_FENCED, E_INTERNAL, E_UNKNOWN_EXPERIMENT,
+                                E_WRONG_SHARD, EPOCH_ZERO, ObserveRequest,
+                                ObserveResponse, ReleaseRequest,
+                                ReleaseResponse, ReportRequest,
+                                RequeueRequest, StatusResponse, SuggestBatch,
                                 Suggestion, epoch_tuple)
 from repro.core.experiment import ExperimentConfig
 from repro.core.space import strip_internal
@@ -141,6 +144,7 @@ def _public_best(best) -> Optional[Dict]:
 
 
 DRAINED_TOMBSTONES = 1024    # max remembered handed-over experiments
+BATCH_DEDUPE_WINDOW = 512    # applied batches remembered for replay
 
 
 class LocalClient(SuggestionClient):
@@ -156,6 +160,12 @@ class LocalClient(SuggestionClient):
         # wrong_shard — not unknown_experiment — so routed clients refresh
         # the map instead of re-adopting here
         self._drained: Dict[str, float] = {}
+        # exactly-once batch replay (API.md §Transport batching):
+        # batch_id -> ("inflight", Event) | ("done", BatchResponse).
+        # Bounded window: a transport retry redelivers promptly, so only
+        # the recent past needs remembering.
+        self._batch_lock = threading.Lock()
+        self._batches: Dict[str, tuple] = {}
 
     # -------------------------------------------------------------- fencing
     def _tombstone(self, exp_id: str) -> None:
@@ -597,32 +607,39 @@ class LocalClient(SuggestionClient):
         state = self._state(req.exp_id)
         self._check_fence(req.exp_id, state)   # report appends durably
         with state.lock:
-            if state.stopped:
-                # deleted/stopped experiments wind their trials down via
-                # the next report, even without a worker-side stop flag
-                return Decision(DECISION_STOP, next_rung=None,
-                                seq=state.metric_seq)
-            # suggestion_id keys the stream when present: it is unique
-            # service-wide, so speculative twins merge and two schedulers'
-            # identically-numbered trials never collide
-            key = req.suggestion_id or req.trial_id
-            state.metric_seq += 1
-            rec = {"seq": state.metric_seq, "trial_key": key,
-                   "trial_id": req.trial_id, "step": req.step,
-                   "value": req.value, "time": time.time()}
-            if req.metadata:
-                rec["metadata"] = req.metadata
-            self.store.append_metric(req.exp_id, key, rec)
-            if state.stopper is None:
-                return Decision(next_rung=None, seq=state.metric_seq)
-            decision = state.stopper.report(key, req.step, req.value)
-            self._snapshot_rungs(req.exp_id, state)
-            if decision == DECISION_STOP:
-                # final prune: the stream is closed — drop its handle
-                self._evict_trial_handles(req.exp_id, key)
-            return Decision(decision,
-                            next_rung=state.stopper.next_rung(key),
+            return self._report_locked(req.exp_id, state, req)
+
+    def _report_locked(self, exp_id: str, state: _ExperimentState,
+                       req: ReportRequest) -> Decision:
+        """Body of :meth:`report` (fence already checked, ``state.lock``
+        held) — shared with the batched apply path, where one lock
+        acquisition covers a whole per-experiment op group."""
+        if state.stopped:
+            # deleted/stopped experiments wind their trials down via
+            # the next report, even without a worker-side stop flag
+            return Decision(DECISION_STOP, next_rung=None,
                             seq=state.metric_seq)
+        # suggestion_id keys the stream when present: it is unique
+        # service-wide, so speculative twins merge and two schedulers'
+        # identically-numbered trials never collide
+        key = req.suggestion_id or req.trial_id
+        state.metric_seq += 1
+        rec = {"seq": state.metric_seq, "trial_key": key,
+               "trial_id": req.trial_id, "step": req.step,
+               "value": req.value, "time": time.time()}
+        if req.metadata:
+            rec["metadata"] = req.metadata
+        self.store.append_metric(exp_id, key, rec)
+        if state.stopper is None:
+            return Decision(next_rung=None, seq=state.metric_seq)
+        decision = state.stopper.report(key, req.step, req.value)
+        self._snapshot_rungs(exp_id, state)
+        if decision == DECISION_STOP:
+            # final prune: the stream is closed — drop its handle
+            self._evict_trial_handles(exp_id, key)
+        return Decision(decision,
+                        next_rung=state.stopper.next_rung(key),
+                        seq=state.metric_seq)
 
     def release(self, exp_id: str, suggestion_id: str) -> bool:
         state = self._state(exp_id)
@@ -657,19 +674,232 @@ class LocalClient(SuggestionClient):
         once."""
         state = self._state(exp_id)
         with state.lock:
-            s = state.pending.get(suggestion_id)
-            if (s is None and assignment is not None
-                    and suggestion_id not in state.closed
-                    and not state.stopped):
-                s = Suggestion(suggestion_id, assignment)
-                state.pending[suggestion_id] = s
-            if s is None or suggestion_id in state.closed or state.stopped:
-                return False
-            if all(o.suggestion_id != suggestion_id
-                   for o in state.orphaned):
-                state.orphaned.append(s)
-                state.stats["requeued"] += 1
-            return True
+            return self._requeue_locked(state, suggestion_id, assignment)
+
+    @staticmethod
+    def _requeue_locked(state: _ExperimentState, suggestion_id: str,
+                        assignment: Optional[Dict] = None) -> bool:
+        """Body of :meth:`requeue` (``state.lock`` held) — shared with
+        the batched apply path."""
+        s = state.pending.get(suggestion_id)
+        if (s is None and assignment is not None
+                and suggestion_id not in state.closed
+                and not state.stopped):
+            s = Suggestion(suggestion_id, assignment)
+            state.pending[suggestion_id] = s
+        if s is None or suggestion_id in state.closed or state.stopped:
+            return False
+        if all(o.suggestion_id != suggestion_id
+               for o in state.orphaned):
+            state.orphaned.append(s)
+            state.stats["requeued"] += 1
+        return True
+
+    # ------------------------------------------------------------- batching
+    def apply_batch(self, req: BatchRequest) -> BatchResponse:
+        """Apply one ordered op batch (API.md §Transport batching) with
+        exactly-once replay: the first delivery of a ``batch_id`` applies
+        and records its per-op results; any redelivery (transport retry
+        after a lost response) answers the recorded results with
+        ``replayed=True`` instead of re-applying.  The window is bounded
+        (``BATCH_DEDUPE_WINDOW``) — retries are prompt, so only the
+        recent past needs remembering."""
+        my_ev = None
+        with self._batch_lock:
+            ent = self._batches.get(req.batch_id)
+            if ent is None:
+                my_ev = threading.Event()
+                self._batches[req.batch_id] = ("inflight", my_ev)
+            elif ent[0] == "done":
+                return BatchResponse(req.batch_id, ent[1].results,
+                                     replayed=True)
+        if my_ev is None:
+            # concurrent redelivery while the first is still applying:
+            # wait for it rather than racing a second application
+            ent[1].wait(timeout=60.0)
+            with self._batch_lock:
+                ent = self._batches.get(req.batch_id)
+            if ent is not None and ent[0] == "done":
+                return BatchResponse(req.batch_id, ent[1].results,
+                                     replayed=True)
+            raise ApiError(E_INTERNAL,
+                           f"batch {req.batch_id}: first delivery failed")
+        try:
+            resp = self._apply_batch(req)
+        except BaseException:
+            with self._batch_lock:
+                self._batches.pop(req.batch_id, None)
+            my_ev.set()
+            raise
+        with self._batch_lock:
+            self._batches[req.batch_id] = ("done", resp)
+            done = [k for k, v in self._batches.items() if v[0] == "done"]
+            for k in done[:max(0, len(done) - BATCH_DEDUPE_WINDOW)]:
+                self._batches.pop(k, None)
+        my_ev.set()
+        return resp
+
+    _BATCH_PARSERS = {"observe": ObserveRequest, "report": ReportRequest,
+                      "release": ReleaseRequest, "requeue": RequeueRequest}
+
+    def _apply_batch(self, req: BatchRequest) -> BatchResponse:
+        """Group ops per experiment (preserving in-batch order) and apply
+        each group with one lock acquisition per phase instead of one
+        per op."""
+        results: List[Optional[BatchOpResult]] = [None] * len(req.ops)
+        groups: Dict[str, List] = {}
+        for i, op in enumerate(req.ops):
+            try:
+                parsed = self._BATCH_PARSERS[op.op].from_json(op.payload)
+            except ApiError as e:
+                results[i] = BatchOpResult.failure(op.seq, e)
+                continue
+            groups.setdefault(parsed.exp_id, []).append((i, op, parsed))
+        for exp_id, items in groups.items():
+            self._apply_group(exp_id, items, results)
+        return BatchResponse(req.batch_id, [
+            r if r is not None else BatchOpResult.failure(
+                op.seq, ApiError(E_INTERNAL, "op not processed"))
+            for r, op in zip(results, req.ops)])
+
+    def _apply_group(self, exp_id: str, items: List,
+                     results: List[Optional[BatchOpResult]]) -> None:
+        def fail_all(err: ApiError) -> None:
+            for i, op, _ in items:
+                if results[i] is None:
+                    results[i] = BatchOpResult.failure(op.seq, err)
+
+        try:
+            state = self._state(exp_id)
+        except ApiError as e:
+            fail_all(e)
+            return
+        # ONE fence check per group (one cached stat amortized over the
+        # whole group, vs one per unbatched call).  A fenced zombie's
+        # group is rejected item-by-item with typed ``fenced`` results —
+        # no op is half-applied.
+        if state.fenced or any(op.op in ("observe", "report")
+                               for _, op, _ in items):
+            try:
+                self._check_fence(exp_id, state)
+            except ApiError as e:
+                fail_all(e)
+                return
+        accepted: List = []      # observes that passed bookkeeping
+        deferred = False         # any tell/forget enqueued this group
+        # phase 1 — bookkeeping for the whole group under ONE lock
+        # acquisition, in batch order (per-experiment ordering contract)
+        with state.lock:
+            for i, op, r in items:
+                if op.op == "observe":
+                    if r.suggestion_id in state.closed:
+                        results[i] = BatchOpResult.success(
+                            op.seq, ObserveResponse(
+                                accepted=False, duplicate=True,
+                                observations=state.observed).to_json())
+                    elif state.stopped:
+                        results[i] = BatchOpResult.success(
+                            op.seq, ObserveResponse(
+                                accepted=False, duplicate=False,
+                                observations=state.observed).to_json())
+                    else:
+                        state.closed.add(r.suggestion_id)
+                        obs = Observation(r.assignment, r.value, r.stddev,
+                                          r.failed, dict(r.metadata))
+                        # deferred fold, enqueued before the log append —
+                        # same exactly-once contract as observe()
+                        state.ops.append(("tell", obs))
+                        state.appends += 1
+                        deferred = True
+                        accepted.append((i, op, r, obs))
+                elif op.op == "report":
+                    try:
+                        d = self._report_locked(exp_id, state, r)
+                        results[i] = BatchOpResult.success(op.seq,
+                                                           d.to_json())
+                    except ApiError as e:
+                        results[i] = BatchOpResult.failure(op.seq, e)
+                elif op.op == "release":
+                    released = False
+                    # an observe earlier in this batch may have closed
+                    # the id (its pending-pop lands in phase 3): the
+                    # closed set is the authority, same as observe dedupe
+                    if r.suggestion_id not in state.closed:
+                        s = state.pending.pop(r.suggestion_id, None)
+                        state.sparse_ids.discard(r.suggestion_id)
+                        if s is not None:
+                            state.ops.append(("forget", s.assignment))
+                            deferred = True
+                            released = True
+                    results[i] = BatchOpResult.success(
+                        op.seq, ReleaseResponse(released=released).to_json())
+                else:   # requeue
+                    ok = self._requeue_locked(state, r.suggestion_id,
+                                              r.assignment)
+                    results[i] = BatchOpResult.success(op.seq,
+                                                       {"requeued": ok})
+        # phase 2 — system-of-record appends OUTSIDE the lock (the store
+        # serializes its own handles), exactly like observe()
+        appended: List = []
+        for i, op, r, obs in accepted:
+            try:
+                self.store.append_observation(exp_id, obs, r.trial_id,
+                                              suggestion_id=r.suggestion_id)
+                appended.append((i, op, r, obs))
+            except BaseException as e:
+                results[i] = BatchOpResult.failure(
+                    op.seq, e if isinstance(e, ApiError) else
+                    ApiError(E_INTERNAL, f"{type(e).__name__}: {e}"))
+        # phase 3 — accounting for the whole group under ONE lock
+        # acquisition; per-op responses see the progressive totals
+        fields = None
+        complete = False
+        with state.lock:
+            for i, op, r, obs in appended:
+                state.pending.pop(r.suggestion_id, None)
+                state.observed += 1
+                if r.failed:
+                    state.failures += 1
+                was_sparse = r.suggestion_id in state.sparse_ids
+                state.sparse_ids.discard(r.suggestion_id)
+                if not obs.failed and obs.value is not None:
+                    regret = (max(0.0, state.best.value - obs.value)
+                              if state.best is not None else 0.0)
+                    bucket = "sparse" if was_sparse else "exact"
+                    state.stats[bucket + "_obs"] += 1
+                    state.stats[bucket + "_regret"] += regret
+                if (not obs.failed and obs.value is not None
+                        and (state.best is None
+                             or obs.value > state.best.value)):
+                    state.best = obs
+                results[i] = BatchOpResult.success(
+                    op.seq, ObserveResponse(
+                        accepted=True, duplicate=False,
+                        observations=state.observed).to_json())
+            if accepted:
+                state.appends -= len(accepted)
+                state.append_cv.notify_all()
+            if appended:
+                fields = dict(observations=state.observed,
+                              failures=state.failures,
+                              best=_public_best(state.best))
+                complete = state.observed >= state.cfg.budget
+            pump = state.pump
+        # phase 4 — ONE coalesced status-mirror write per batch group
+        # (terminal transitions bypass the throttle and always write)
+        if fields is not None:
+            if complete:
+                fields["state"] = "complete"
+                self.store.update_status(exp_id, **fields)
+            else:
+                self._mirror_status(exp_id, state, fields)
+        for i, op, r, obs in appended:
+            self._evict_trial_handles(exp_id, r.suggestion_id, r.trial_id)
+        if deferred:
+            if pump is not None and pump.alive:
+                pump.wake()     # one wake per group, not per op
+            else:
+                self._drain_sync(state)
 
     def drain(self, exp_id: str) -> DrainResponse:
         """Quiesce + hand over one experiment (rebalance control plane):

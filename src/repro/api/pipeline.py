@@ -140,10 +140,17 @@ class FitExecutor:
     #: wait — a request is parked on that fit's install.
     GATHER_WINDOW = 0.02
 
-    #: max experiments fitted in one batched dispatch; also the k the
-    #: executor pads to (``gp.lane_pad``), so one compile per bucket
-    #: covers every batch width up to this
-    MAX_LANES = 8
+    #: bounds for the *dynamic* co-batch width (``max_lanes``): the cap
+    #: on experiments fitted in one batched dispatch is sized from the
+    #: executor's own saturation signals (backlog per worker, duty
+    #: cycle) and rounded to a power of two so every width lands on a
+    #: ``gp.lane_pad`` compile bucket
+    LANES_MIN = 2
+    LANES_CAP = 16
+
+    #: legacy pin: when set, overrides the dynamic sizing with a fixed
+    #: cap (tests pin this to make batch widths deterministic)
+    MAX_LANES: Optional[int] = None
 
     #: window (seconds) over which the duty cycle decays — admission
     #: control wants *recent* saturation, not the lifetime average
@@ -254,6 +261,32 @@ class FitExecutor:
             cap = self.workers * self.DUTY_WINDOW / 2.0
             return min(1.0, self._duty_busy / cap) if cap > 0 else 0.0
 
+    def _max_lanes_locked(self, duty: float) -> int:
+        """Dynamic co-batch cap (holding ``_cv``): aim to clear the
+        current backlog in one dispatch round per worker, doubling when
+        the recent duty cycle says the pool is saturated (bigger batches
+        amortize better exactly when dispatches are the bottleneck);
+        round up to a power of two (compile-bucket alignment), clamp to
+        [LANES_MIN, LANES_CAP]."""
+        if self.MAX_LANES is not None:
+            return self.MAX_LANES
+        want = (len(self._jobs) + self.workers - 1) // max(1, self.workers)
+        if duty >= 0.5:
+            want *= 2
+        lanes = self.LANES_MIN
+        while lanes < want and lanes < self.LANES_CAP:
+            lanes *= 2
+        return lanes
+
+    def max_lanes(self) -> int:
+        """Current cap on experiments co-batched into one dispatch."""
+        with self._cv:
+            now = time.monotonic()
+            self._decay_duty(now)
+            cap = self.workers * self.DUTY_WINDOW / 2.0
+            duty = min(1.0, self._duty_busy / cap) if cap > 0 else 0.0
+            return self._max_lanes_locked(duty)
+
     def snapshot(self) -> Dict[str, Any]:
         with self._cv:
             now = time.monotonic()
@@ -265,7 +298,8 @@ class FitExecutor:
                           if batched else 0.0)
             return dict(self.stats, backlog=len(self._jobs),
                         workers=self.workers, duty=round(duty, 4),
-                        mean_batch=mean_batch)
+                        mean_batch=mean_batch,
+                        max_lanes=self._max_lanes_locked(duty))
 
     # ----------------------------------------------------------- workers
     def _pop(self):
@@ -352,9 +386,10 @@ class FitExecutor:
             time.sleep(self.GATHER_WINDOW)
             slept = self.GATHER_WINDOW
         grabbed: List[tuple] = []
+        lanes_cap = self.max_lanes()
         with self._cv:
             for k2 in list(self._jobs):
-                if 1 + len(grabbed) >= self.MAX_LANES:
+                if 1 + len(grabbed) >= lanes_cap:
                     break
                 p2, f2 = self._jobs[k2]
                 if isinstance(f2, BatchableFit):

@@ -440,6 +440,114 @@ class BestResponse:
         return cls(d.get("best"))
 
 
+# --------------------------------------------------------------- batching
+# Multiplexed transport plane (additive v1, API.md §Transport batching):
+# a BatchRequest carries an *ordered* list of typed data-plane ops
+# (observe / report / release / requeue) and is applied per experiment in
+# op order, so one wire round trip replaces N.  ``batch_id`` is client-
+# assigned and unique per batch; the server keeps a bounded dedupe window
+# of applied batches so a transport-level retry of the same batch_id
+# replays the recorded per-op results instead of re-applying — batches
+# are exactly-once even though the POST is retried like any idempotent
+# verb.  Each op answers individually: ``ok`` + the op's normal response
+# payload, or a typed error (e.g. every op of a fenced zombie's batch
+# answers ``fenced`` — item-by-item, never partially ghost-applied).
+
+BATCH_OP_KINDS = ("observe", "report", "release", "requeue")
+
+
+@dataclass
+class BatchOp:
+    """One typed op inside a batch.  ``seq`` is the client's per-batch
+    position (dense, 0-based) — results echo it so a caller can match
+    them back without relying on list order."""
+    seq: int
+    op: str                                 # one of BATCH_OP_KINDS
+    payload: Dict[str, Any]                 # the op's request to_json()
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"seq": self.seq, "op": self.op, "payload": self.payload}
+
+    @classmethod
+    def from_json(cls, d) -> "BatchOp":
+        op = d.get("op")
+        if op not in BATCH_OP_KINDS:
+            raise ApiError(E_BAD_REQUEST, f"unknown batch op {op!r}")
+        return cls(int(d.get("seq", 0)), op, d.get("payload") or {})
+
+
+@dataclass
+class BatchRequest:
+    batch_id: str
+    ops: List[BatchOp] = field(default_factory=list)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"version": PROTOCOL_VERSION, "batch_id": self.batch_id,
+                "ops": [o.to_json() for o in self.ops]}
+
+    @classmethod
+    def from_json(cls, d) -> "BatchRequest":
+        if not d.get("batch_id"):
+            raise ApiError(E_BAD_REQUEST, "batch requires 'batch_id'")
+        return cls(d["batch_id"],
+                   [BatchOp.from_json(o) for o in d.get("ops", [])])
+
+
+@dataclass
+class BatchOpResult:
+    """Per-op outcome: ``result`` is the op's normal response JSON when
+    ``ok``, ``error`` is an ``{"code", "message"}`` pair otherwise (same
+    codes as the unbatched endpoints — API.md §Transport batching has the
+    per-op error table)."""
+    seq: int
+    ok: bool
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[Dict[str, Any]] = None
+
+    @classmethod
+    def success(cls, seq: int, result: Dict[str, Any]) -> "BatchOpResult":
+        return cls(seq, True, result=result)
+
+    @classmethod
+    def failure(cls, seq: int, err: ApiError) -> "BatchOpResult":
+        return cls(seq, False,
+                   error={"code": err.code, "message": err.message})
+
+    @property
+    def error_code(self) -> Optional[str]:
+        return (self.error or {}).get("code") if not self.ok else None
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"seq": self.seq, "ok": self.ok, "result": self.result,
+                "error": self.error}
+
+    @classmethod
+    def from_json(cls, d) -> "BatchOpResult":
+        return cls(int(d.get("seq", 0)), bool(d.get("ok")),
+                   d.get("result"), d.get("error"))
+
+
+@dataclass
+class BatchResponse:
+    """``replayed`` marks a dedupe-window hit: the batch was already
+    applied and these are the recorded results of the first
+    application."""
+    batch_id: str
+    results: List[BatchOpResult] = field(default_factory=list)
+    replayed: bool = False
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"batch_id": self.batch_id,
+                "results": [r.to_json() for r in self.results],
+                "replayed": self.replayed}
+
+    @classmethod
+    def from_json(cls, d) -> "BatchResponse":
+        return cls(d.get("batch_id", ""),
+                   [BatchOpResult.from_json(r) for r in d.get("results", [])],
+                   bool(d.get("replayed", False)))
+
+
 # ------------------------------------------------------------------- fleet
 # Messages for the fleet control plane (repro.fleet): shards and
 # schedulers heartbeat to the FleetManager, which answers with the

@@ -203,10 +203,26 @@ class ChaosMonkey:
             self._thread.join(timeout=5)
 
     def _loop(self):
+        # The FIRST kill is lease-triggered, not clock-triggered: a fixed
+        # pre-kill sleep races the workload — a short run (warm caches)
+        # can complete inside one period, the monkey never fires, and a
+        # test asserting "chaos happened" (kills >= 1) flakes.  Poll
+        # until the pool actually holds a lease, kill immediately, then
+        # fall into the periodic cadence.
+        poll = max(0.001, self.period_s / 10.0)
+        while not self._stop.is_set():
+            if self.cluster.status()["pools"][self.pool]["leases"] > 0:
+                self._kill_one()
+                break
+            if self._stop.wait(poll):
+                return
         while not self._stop.wait(self.period_s):
-            before = self.cluster.status()["pools"][self.pool]["chips"]
-            revoked = self.cluster.fail_nodes(self.pool, 1)
-            self.kills += 1
-            if self.heal_s is not None:
-                time.sleep(self.heal_s)
-                self.cluster.scale(self.pool, before)   # node replaced
+            self._kill_one()
+
+    def _kill_one(self):
+        before = self.cluster.status()["pools"][self.pool]["chips"]
+        self.cluster.fail_nodes(self.pool, 1)
+        self.kills += 1
+        if self.heal_s is not None:
+            time.sleep(self.heal_s)
+            self.cluster.scale(self.pool, before)       # node replaced

@@ -219,7 +219,14 @@ class BayesOpt(Optimizer):
         variants, the rank-1 appends, and the q-EI scan for every batch
         pad up to ``batch``).  Touches no optimizer state — safe to call
         from a background thread while ``ask``/``tell`` run elsewhere,
-        since jitted functions cache per shape signature process-wide."""
+        since jitted functions cache per shape signature process-wide.
+
+        The solo ``fit_lanes=(1,)`` executor variant is warmed too:
+        since the FitExecutor routes every refit through ``batched_fit``,
+        the lane-pad-1 compile otherwise lands mid-run — off the request
+        path, but on a saturated box it still stalls in-flight requests
+        for the compile's duration.  Multi-lane pads stay lazy (they only
+        occur when experiments co-batch)."""
         target = gp.bucket_size(max(1, int(max_history)))
         k_pads, kp = [], 1
         pad_max = 1 << max(0, int(batch) - 1).bit_length()
@@ -238,7 +245,7 @@ class BayesOpt(Optimizer):
                                   fit_steps=(self.fit_steps,
                                              self._warm_steps_at(b // 2),
                                              self._warm_steps_at(b)),
-                                  k_pads=k_pads, n_cand=m)
+                                  k_pads=k_pads, n_cand=m, fit_lanes=(1,))
                 warmed += 1
             b *= 2
         self._prewarmed = max(self._prewarmed, target)

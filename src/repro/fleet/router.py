@@ -22,6 +22,17 @@ Heartbeats: a daemon thread beats every manager-prescribed ``period``
 carrying this worker's *holdings* — the pending suggestion_ids it has
 taken and not yet observed/released, per experiment.  If this process
 dies, the manager requeues exactly those so survivors pick them up.
+
+Batching (``batch=True``): the transport plane (API.md §Transport
+batching) keeps one write-behind lane per *owning shard* — observe /
+release / requeue / below-rung reports enqueue into the owner's lane and
+ship as one ``BatchRequest`` per shard per flush trigger.  A per-op
+``wrong_shard`` / ``fenced`` result re-homes and re-enqueues just that op
+on the new owner's lane; holdings shrink only once a flush confirms the
+op (a crash in between means the manager requeues an already-observed
+suggestion, which the shard's closed-set dedupe absorbs — the safe
+direction).  When a heartbeat is due, it piggybacks on the flush instead
+of waiting for the periodic timer.
 """
 from __future__ import annotations
 
@@ -39,6 +50,9 @@ from repro.api.protocol import (ApiError, BestResponse, CreateExperiment,
                                 HeartbeatResponse, ObserveRequest,
                                 ObserveResponse, ReportRequest, ShardMap,
                                 StatusResponse, SuggestBatch)
+from repro.api.transport import (FLUSH_DEADLINE_S, FLUSH_MAX_OPS,
+                                 DecisionGate, OP_OBSERVE, OP_RELEASE,
+                                 OP_REPORT, OP_REQUEUE, WriteBehind)
 from repro.fleet.hashring import HashRing
 
 # ``fenced`` is retryable from the client's seat: the answering shard
@@ -137,7 +151,9 @@ class FleetClient(SuggestionClient):
 
     def __init__(self, fleet, worker_id: Optional[str] = None,
                  heartbeat: bool = True, timeout: float = 30.0,
-                 replicas: int = 64, fault_plan=None):
+                 replicas: int = 64, fault_plan=None,
+                 batch: bool = False, batch_max: int = FLUSH_MAX_OPS,
+                 batch_deadline: float = FLUSH_DEADLINE_S):
         if isinstance(fleet, str):
             self._proxy = _HttpFleet(fleet, timeout=timeout)
         else:
@@ -162,6 +178,17 @@ class FleetClient(SuggestionClient):
         self._stop = threading.Event()
         self._wake = threading.Event()
         self._hb_thread: Optional[threading.Thread] = None
+        self._last_beat = time.monotonic()
+        self._wb: Optional[WriteBehind] = None
+        self._gate: Optional[DecisionGate] = None
+        if batch:
+            self._gate = DecisionGate()
+            self._wb = WriteBehind(self._send_shard_batch,
+                                   max_ops=batch_max,
+                                   deadline=batch_deadline,
+                                   on_result=self._on_batch_result,
+                                   after_flush=self._maybe_prompt_beat,
+                                   name=f"wb-{self.worker_id}")
         self._refresh_map(force=True)
         if heartbeat:
             self.beat()                       # register before first suggest
@@ -259,6 +286,83 @@ class FleetClient(SuggestionClient):
         except ApiError:
             pass    # let the retried call surface the real failure
 
+    # ---------------------------------------------------------- batching
+    def flush(self) -> None:
+        """Drain every shard lane (no-op when batching is off)."""
+        if self._wb is not None:
+            self._wb.flush()
+
+    def _enqueue_op(self, kind: str, payload: dict, exp_id: str) -> None:
+        self._wb.enqueue(kind, payload, lane=self._owner(exp_id))
+
+    def _send_shard_batch(self, shard_id, req):
+        """WriteBehind transport: one batch per owning shard.  Works over
+        both fleet flavors — ``LocalClient`` and ``HTTPClient`` expose
+        the same ``apply_batch``."""
+        with self._lock:
+            url = self._map.shards.get(shard_id, "")
+            known = shard_id in self._map.shards
+        if not known:
+            raise ApiError(E_WRONG_SHARD, f"shard {shard_id!r} left the map")
+        if self._fault_plan is not None:
+            try:
+                self._fault_plan.gate(self.worker_id, shard_id)
+            except ConnectionRefusedError as e:
+                raise ApiError(E_INTERNAL, f"service unreachable: {e}")
+        return self._proxy.shard_client(shard_id, url).apply_batch(req)
+
+    def _on_batch_result(self, lane, op, result, err) -> bool:
+        """Per-op outcome from a shipped batch (WriteBehind hook)."""
+        p = op.payload
+        if err is None:
+            if op.kind == OP_REPORT:
+                self._gate.note((p.get("exp_id"),
+                                 p.get("suggestion_id") or p.get("trial_id")),
+                                Decision.from_json(result.result))
+            else:
+                # confirmed on the owner: the holding may shrink now (and
+                # only now — dropping before confirmation could strand a
+                # suggestion the manager no longer knows to requeue)
+                self._drop_holding(p.get("exp_id", ""),
+                                   p.get("suggestion_id", ""))
+            return False
+        exp_id = p.get("exp_id", "")
+        if err.code in _RETRYABLE and op.attempts < 2:
+            # single-op re-home: wrong_shard / fenced / unreachable means
+            # *this op's* owner moved — refresh, re-home, re-enqueue just
+            # this op on the new owner's lane (the rest of the batch
+            # already landed where it belonged)
+            try:
+                if err.code in (E_WRONG_SHARD, E_FENCED):
+                    with self._lock:
+                        self._assigned.pop(exp_id, None)
+                self._refresh_map(force=True)
+                self._rehome(exp_id)
+                self._wb.enqueue(op.kind, p, lane=self._owner(exp_id),
+                                 attempts=op.attempts + 1)
+                return True
+            except ApiError:
+                pass        # fall through to terminal accounting
+        self._drop_holding(exp_id, p.get("suggestion_id", ""))
+        with self._lock:
+            self.events.append({"event": "batch_op_failed", "op": op.kind,
+                                "exp_id": exp_id, "code": err.code,
+                                "error": err.message, "time": time.time()})
+            if len(self.events) > 128:
+                del self.events[:64]
+        return False    # WriteBehind stats/op_errors record it too
+
+    def _maybe_prompt_beat(self) -> None:
+        """Flush piggyback: if a heartbeat is due, trigger it now instead
+        of waiting out the periodic timer (holdings changed by the batch
+        reach the manager on the flush cadence)."""
+        if self._hb_thread is None:
+            return
+        with self._lock:
+            due = time.monotonic() - self._last_beat >= self._period
+        if due:
+            self._wake.set()
+
     # ---------------------------------------------------------- protocol
     def create_experiment(self, req: CreateExperiment) -> CreateResponse:
         resp, shard_id, version = self._proxy.create(req)
@@ -270,6 +374,7 @@ class FleetClient(SuggestionClient):
         return resp
 
     def suggest(self, exp_id: str, count: int = 1) -> SuggestBatch:
+        self.flush()
         batch = self._routed(exp_id, lambda c: c.suggest(exp_id, count))
         if batch.suggestions:
             with self._lock:
@@ -282,14 +387,37 @@ class FleetClient(SuggestionClient):
         return batch
 
     def observe(self, req: ObserveRequest) -> ObserveResponse:
+        if self._wb is not None:
+            # fire-and-forget into the owner's lane; the holding is kept
+            # until a flush confirms (see _on_batch_result)
+            self._enqueue_op(OP_OBSERVE, req.to_json(), req.exp_id)
+            return ObserveResponse(accepted=True, duplicate=False,
+                                   observations=-1)
         resp = self._routed(req.exp_id, lambda c: c.observe(req))
         self._drop_holding(req.exp_id, req.suggestion_id)
         return resp
 
     def report(self, req: ReportRequest) -> Decision:
-        return self._routed(req.exp_id, lambda c: c.report(req))
+        if self._wb is not None:
+            stashed = self._gate.take_stashed(req)
+            if stashed is not None:
+                return stashed
+            if not self._gate.blocking(req):
+                self._enqueue_op(OP_REPORT, req.to_json(), req.exp_id)
+                return self._gate.ride_decision(req)
+            self._wb.flush()    # ordering: queued ops land first
+        d = self._routed(req.exp_id, lambda c: c.report(req))
+        if self._gate is not None:
+            self._gate.note(self._gate.key(req), d)
+            self._gate.take_stashed(req)    # delivered directly: unstash
+        return d
 
     def release(self, exp_id: str, suggestion_id: str) -> bool:
+        if self._wb is not None:
+            self._enqueue_op(OP_RELEASE,
+                             {"exp_id": exp_id,
+                              "suggestion_id": suggestion_id}, exp_id)
+            return True
         ok = self._routed(exp_id,
                           lambda c: c.release(exp_id, suggestion_id))
         self._drop_holding(exp_id, suggestion_id)
@@ -297,6 +425,12 @@ class FleetClient(SuggestionClient):
 
     def requeue(self, exp_id: str, suggestion_id: str,
                 assignment: Optional[dict] = None) -> bool:
+        if self._wb is not None:
+            self._enqueue_op(OP_REQUEUE,
+                             {"exp_id": exp_id,
+                              "suggestion_id": suggestion_id,
+                              "assignment": assignment}, exp_id)
+            return True
         ok = self._routed(exp_id,
                           lambda c: c.requeue(exp_id, suggestion_id,
                                               assignment=assignment))
@@ -304,15 +438,23 @@ class FleetClient(SuggestionClient):
         return ok
 
     def status(self, exp_id: str) -> StatusResponse:
-        return self._routed(exp_id, lambda c: c.status(exp_id))
+        self.flush()
+        resp = self._routed(exp_id, lambda c: c.status(exp_id))
+        if self._wb is not None:
+            resp.transport = dict(resp.transport or {})
+            resp.transport["batch"] = dict(self._wb.stats)
+            resp.transport["batch"]["depth"] = self._wb.depth()
+        return resp
 
     def stop(self, exp_id: str, state: str = "stopped") -> StatusResponse:
+        self.flush()
         resp = self._routed(exp_id, lambda c: c.stop(exp_id, state))
         with self._lock:
             self._holdings.pop(exp_id, None)
         return resp
 
     def best_response(self, exp_id: str) -> BestResponse:
+        self.flush()
         return self._routed(exp_id, lambda c: c.best_response(exp_id))
 
     # -------------------------------------------------------- heartbeats
@@ -341,6 +483,7 @@ class FleetClient(SuggestionClient):
         resp = self._proxy.heartbeat(req)
         with self._lock:
             self._period = max(0.05, float(resp.period))
+            self._last_beat = time.monotonic()
         if resp.map_version != self.map_version:
             self._refresh_map(force=True)
         return resp
@@ -383,6 +526,11 @@ class FleetClient(SuggestionClient):
         """Stop the heartbeat thread (joined with a timeout — a beat hung
         in a dead transport must not block interpreter exit) and release
         shard connections."""
+        if self._wb is not None:
+            try:
+                self._wb.close()    # flush queued ops while shards live
+            except ApiError:
+                pass
         self._stop.set()
         self._wake.set()
         if self._hb_thread is not None:

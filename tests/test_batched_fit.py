@@ -129,6 +129,7 @@ def test_executor_caps_batch_at_max_lanes():
     calls, installed = [], []
     runner = _recording_runner(calls)
     ex = FitExecutor(workers=1)
+    ex.MAX_LANES = 4        # pin the (normally dynamic) cap
     try:
         gate = threading.Event()
         ex.submit("hold", lambda: (gate.wait(5), False)[-1], PRIO_MISS)
@@ -141,6 +142,28 @@ def test_executor_caps_batch_at_max_lanes():
         gate.set()
         assert _wait(lambda: len(installed) == ex.MAX_LANES + 3)
         assert max(len(c) for c in calls) == ex.MAX_LANES
+    finally:
+        ex.stop()
+
+
+def test_executor_max_lanes_scales_with_backlog():
+    """The dynamic cap tracks backlog per worker: idle -> LANES_MIN, a
+    deep queue -> more lanes (power of two), never past LANES_CAP."""
+    ex = FitExecutor(workers=1)
+    try:
+        assert ex.max_lanes() == ex.LANES_MIN
+        gate = threading.Event()
+        ex.submit("hold", lambda: (gate.wait(5), False)[-1], PRIO_MISS)
+        _wait(lambda: ex.backlog() == 0)
+        for i in range(6):
+            ex.submit(f"e{i}", lambda: False, PRIO_IDLE)
+        lanes = ex.max_lanes()
+        assert lanes == 8                   # 6 queued / 1 worker -> pad to 8
+        assert ex.snapshot()["max_lanes"] == lanes
+        for i in range(40):
+            ex.submit(f"x{i}", lambda: False, PRIO_IDLE)
+        assert ex.max_lanes() == ex.LANES_CAP
+        gate.set()
     finally:
         ex.stop()
 

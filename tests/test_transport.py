@@ -1,0 +1,261 @@
+"""Batched wire protocol (API.md §Transport batching).
+
+The transport-plane invariants under test (ISSUE 9 acceptance):
+  * a batch redelivered after a mid-response connection kill applies
+    exactly once — the server's dedupe window replays the recorded
+    results instead of double-applying;
+  * per-experiment op order survives interleaved flushes (the server
+    applies each experiment's ops in client enqueue order);
+  * only rung-crossing reports block for their real decision — the
+    below-rung majority rides the batch with a synthetic CONTINUE;
+  * a fenced incarnation's whole batch is rejected item-by-item and
+    leaves ZERO log entries;
+  * a ``FleetClient`` keeps one write-behind lane per owning shard and
+    re-homes a single ``wrong_shard`` op without disturbing the rest
+    of its batch.
+"""
+import os
+import tempfile
+
+import pytest
+
+from repro.api import CreateExperiment, HTTPClient, serve_api
+from repro.api.local import LocalClient
+from repro.api.protocol import (BatchOp, BatchRequest, E_FENCED,
+                                ObserveRequest, ReportRequest)
+from repro.core import ExperimentConfig, Param, Space
+from repro.core.store import Store
+from repro.fleet import FleetClient, FleetManager
+
+
+def chaos(fn):
+    return pytest.mark.chaos(pytest.mark.skipif(
+        not os.environ.get("REPRO_CHAOS"),
+        reason="chaos fault injection (tier-2; set REPRO_CHAOS=1)")(fn))
+
+
+def _space():
+    return Space([Param("x", "double", 0, 1)])
+
+
+def _cfg_json(name, budget=64, **kw):
+    kw.setdefault("optimizer", "random")
+    kw.setdefault("space", _space())
+    return dict(ExperimentConfig(name=name, budget=budget, **kw).to_json())
+
+
+# ------------------------------------------------------------ exactly-once
+@chaos
+@pytest.mark.parametrize("retry_seed", [0, 1, 7])
+def test_batch_replay_after_mid_response_kill_applies_exactly_once(
+        retry_seed):
+    """Kill the connection after the server has committed the batch but
+    before the client reads the response: the idempotent resend must hit
+    the dedupe window and replay, not double-apply."""
+    root = tempfile.mkdtemp()
+    server = serve_api(root).start()
+    client = HTTPClient(server.url, batch=True, batch_deadline=60.0,
+                        retry_seed=retry_seed)
+    try:
+        exp = client.create_experiment(CreateExperiment(
+            config=_cfg_json("replay"))).exp_id
+        # establish this thread's keep-alive conn, then arm a one-shot
+        # fault on it: the next response is read one byte in, then the
+        # connection dies — the server HAS applied the batch
+        client.status(exp)
+        conn = client._local.conn
+        real = conn.getresponse
+        armed = [True]
+
+        def mid_response_kill():
+            if armed[0]:
+                armed[0] = False
+                r = real()
+                r.read(1)
+                raise OSError("injected mid-response connection kill")
+            return real()
+
+        conn.getresponse = mid_response_kill
+        n = 6
+        for j in range(n):
+            client.observe(ObserveRequest(
+                exp, f"sid-{j:03d}", {"x": 0.5}, value=float(j)))
+        client.flush()      # ships on this thread through the armed conn
+        assert not armed[0], "injected fault never fired"
+        assert client._wb.stats["replayed"] == 1
+        assert client._wb.stats["batches"] == 1
+        assert client._wb.stats["op_errors"] == 0
+        records = Store(root).load_observation_records(exp)
+        assert len(records) == n, "replayed batch must not double-apply"
+        assert len({r["suggestion_id"] for r in records}) == n
+        assert client.status(exp).observations == n
+    finally:
+        client.close()
+        server.shutdown()
+
+
+# ----------------------------------------------------------------- ordering
+def test_per_experiment_op_order_survives_interleaved_flushes():
+    """Small batch_max forces several wire batches; each experiment's
+    metric stream must still land in enqueue order (seq-dense)."""
+    root = tempfile.mkdtemp()
+    server = serve_api(root).start()
+    client = HTTPClient(server.url, batch=True, batch_max=4,
+                        batch_deadline=60.0)
+    try:
+        exps = [client.create_experiment(CreateExperiment(
+            config=_cfg_json(f"order-{i}"))).exp_id for i in range(2)]
+        # first report per trial blocks (unknown rung) — prime the gate
+        for e in exps:
+            client.report(ReportRequest(e, "t0", 1, 0.1))
+        # 12 interleaved riding reports per experiment across >= 6 batches
+        for step in range(2, 14):
+            for e in exps:
+                client.report(ReportRequest(e, "t0", step, step / 100.0))
+        client.flush()
+        assert client._wb.stats["batches"] >= 3
+        for e in exps:
+            recs = Store(root).load_metrics(e)
+            steps = [r["step"] for r in recs]
+            assert steps == sorted(steps) == list(range(1, 14))
+            seqs = [r["seq"] for r in recs]
+            assert seqs == sorted(seqs)
+    finally:
+        client.close()
+        server.shutdown()
+
+
+# ------------------------------------------------------------ decision gate
+def test_rung_crossing_report_blocks_while_below_rung_reports_ride():
+    root = tempfile.mkdtemp()
+    server = serve_api(root).start()
+    client = HTTPClient(server.url, batch=True, batch_deadline=60.0)
+    try:
+        exp = client.create_experiment(CreateExperiment(
+            config=_cfg_json("gate", early_stop={"min_steps": 1,
+                                                 "eta": 3}))).exp_id
+        # first report of a trial: rung unknown -> blocks for the real
+        # decision (a real decision carries the server's stream seq)
+        d1 = client.report(ReportRequest(exp, "t0", 1, 0.5))
+        assert d1.seq != 0
+        nr = d1.next_rung
+        assert nr is not None and nr > 1
+        # strictly below the next rung: rides the batch with a synthetic
+        # CONTINUE (seq=0 marks it client-side)
+        for step in range(2, nr):
+            d = client.report(ReportRequest(exp, "t0", step, 0.5))
+            assert d.seq == 0 and d.decision == "continue"
+        assert client._wb.depth() == max(0, nr - 2)
+        # at the rung: blocks again — the queue drains first, then the
+        # plain call returns the server's decision
+        dr = client.report(ReportRequest(exp, "t0", nr, 0.5))
+        assert dr.seq != 0
+        assert client._wb.depth() == 0
+        recs = Store(root).load_metrics(exp)
+        assert [r["step"] for r in recs] == list(range(1, nr + 1))
+    finally:
+        client.close()
+        server.shutdown()
+
+
+# ---------------------------------------------------------------- fencing
+def test_fenced_zombie_batch_rejected_item_by_item_with_zero_log_entries():
+    root = tempfile.mkdtemp()
+    zombie = LocalClient(root)
+    eid = zombie.create_experiment(CreateExperiment(
+        config=_cfg_json("fence-batch", budget=6), exp_id="exp-fence-batch",
+        epoch=[1, 1])).exp_id
+    held = zombie.suggest(eid, 2).suggestions
+    owner = LocalClient(root)
+    owner.create_experiment(CreateExperiment(config={}, exp_id=eid,
+                                             epoch=[1, 2]))
+    # the zombie heals and flushes a whole mixed batch: every op answers
+    # typed fenced, none is applied, nothing reaches the log
+    req = BatchRequest("bz-fence-1", [
+        BatchOp(0, "observe", ObserveRequest(
+            eid, held[0].suggestion_id, held[0].assignment,
+            value=0.9).to_json()),
+        BatchOp(1, "report", ReportRequest(eid, "t0", 1, 0.9).to_json()),
+        BatchOp(2, "observe", ObserveRequest(
+            eid, held[1].suggestion_id, held[1].assignment,
+            value=0.8).to_json()),
+        BatchOp(3, "release", {"exp_id": eid,
+                               "suggestion_id": held[1].suggestion_id}),
+    ])
+    resp = zombie.apply_batch(req)
+    assert len(resp.results) == 4
+    for r in resp.results:
+        assert not r.ok and r.error["code"] == E_FENCED
+    assert owner.store.load_observation_records(eid) == []
+    assert owner.store.load_metrics(eid) == []
+    # the exact same batch replayed answers the recorded fenced results
+    again = zombie.apply_batch(req)
+    assert again.replayed
+    assert [r.error["code"] for r in again.results] == [E_FENCED] * 4
+
+
+# ------------------------------------------------------------------- fleet
+@chaos
+def test_fleet_client_keeps_one_lane_per_shard_and_rehomes_wrong_shard():
+    root = tempfile.mkdtemp()
+    manager = FleetManager()
+    for i in range(2):
+        manager.add_shard(LocalClient(root), shard_id=f"shard-{i}")
+    client = FleetClient(manager, heartbeat=False, batch=True,
+                         batch_deadline=60.0)
+    try:
+        # pick (by non-destructive ring simulation) one experiment that a
+        # late-joining third shard would take over, and one on the OTHER
+        # current owner that stays put
+        ring = manager.ring
+        moved = next(f"exp-lane-{i:03d}" for i in range(256)
+                     if ring.moved_by_adding("shard-late",
+                                             [f"exp-lane-{i:03d}"]))
+        kept = next(f"exp-keep-{i:03d}" for i in range(256)
+                    if ring.owner(f"exp-keep-{i:03d}") != ring.owner(moved)
+                    and not ring.moved_by_adding("shard-late",
+                                                 [f"exp-keep-{i:03d}"]))
+        eids, owners = [moved, kept], {ring.owner(moved), ring.owner(kept)}
+        # two experiments on two different owners -> two write-behind
+        # lanes (blocking create/suggest first: they drain the queue)
+        sugg = {}
+        for eid in eids:
+            client.create_experiment(CreateExperiment(
+                config=_cfg_json(eid, budget=8), exp_id=eid))
+            sugg[eid] = client.suggest(eid, 1).suggestions[0]
+        for eid in eids:
+            s = sugg[eid]
+            client.observe(ObserveRequest(eid, s.suggestion_id,
+                                          s.assignment, value=0.5))
+        with client._wb._cv:
+            lanes = [l for l, q in client._wb._lanes.items() if q]
+        assert sorted(lanes) == sorted(owners)
+        client.flush()
+        for eid in eids:
+            assert client.status(eid).observations == 1
+        assert client._holdings == {}
+
+        # enqueue an op for the doomed experiment on its (about to be
+        # stale) owner lane, then add the shard: the per-op wrong_shard
+        # answer must re-home JUST that op while its batch-mates land
+        # where they were
+        sm = client.suggest(moved, 1).suggestions[0]
+        sk = client.suggest(kept, 1).suggestions[0]
+        client.observe(ObserveRequest(moved, sm.suggestion_id,
+                                      sm.assignment, value=0.7))
+        client.observe(ObserveRequest(kept, sk.suggestion_id,
+                                      sk.assignment, value=0.7))
+        manager.add_shard(LocalClient(root), shard_id="shard-late")
+        client.flush()      # stale lane -> wrong_shard -> re-home -> apply
+        assert client.status(moved).observations == 2
+        assert client.status(kept).observations == 2
+        assert client._wb.stats["op_errors"] == 0
+        assert client._holdings == {}
+        assert client._owner(moved) == "shard-late"
+    finally:
+        client.close()
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(pytest.main([__file__, "-v"] + sys.argv[1:]))
