@@ -1,0 +1,98 @@
+"""Serial vs batched cross-experiment q-EI ask cost (ISSUE 10).
+
+Measures the per-ask wall cost of k concurrent experiments' speculative
+refill selections at the h=50 operating point (shape bucket 64, pool of
+640 candidates, ``ASK_CHUNK=8`` picks per ask — exactly what a pump's
+``_ask_lane`` snapshots in steady state):
+
+* ``serial/k8``   — k independent ``gp.select_batch`` calls, one per
+  experiment (the pre-ISSUE-10 refill path: one greedy q-EI dispatch
+  per experiment).
+* ``batched/k8``  — ONE ``gp.batched_select`` dispatch scanning all k
+  lanes' constant-liar picks together (what the executor's ask gather
+  runs when k pumps' refill demand lands in one gather window).
+* ``batched/k32`` — same at 32 lanes, where the per-dispatch fixed
+  overhead amortizes furthest.
+
+Rows are µs **per ask** (one ask = one experiment's 8-point selection)
+so the serial/batched ratio reads directly as the throughput speedup.
+On a single-core CPU host the win is bounded by per-dispatch Python +
+XLA launch overhead; the vmap'd scan exists for per-device batching on
+TPU, where lanes share the fused Pallas EI kernel (see API.md
+§Ask batching).
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.suggest import gp
+
+H = 50          # history size -> bucket 64
+D = 4
+M = 640         # candidate pool size (BayesOpt default n_candidates*1.25)
+N_ASK = 8       # picks per ask (pipeline.ASK_CHUNK)
+BUCKET = 64
+
+
+def _experiments(k, seed=0):
+    """k experiments' (posterior, candidate pool, incumbent) at h=50."""
+    rng = np.random.default_rng(seed)
+    items = []
+    for i in range(k):
+        x = rng.random((H, D))
+        w = rng.random(D)
+        y = np.sin(3.0 * x @ w) + 0.1 * rng.standard_normal(H)
+        post = gp.fit_gp(x, y, steps=8, bucket=BUCKET)
+        cand = rng.random((M, D)).astype(np.float32)
+        items.append((post, cand, float(y.max()), N_ASK))
+    return items
+
+
+def run(reps=5, quick=False):
+    """Yield (row_suffix, samples) with samples in µs per ask."""
+    if quick:
+        reps = 3
+    widths = (8, 32)
+    items = _experiments(max(widths))
+    # pay every compile up front (select_batch's (bucket, k_pad) scan +
+    # batched_select's (bucket, k_pad, lane-pad) lanes) so rows measure
+    # steady state
+    post, cand, best, n = items[0]
+    gp.select_batch(post, cand, best, n)
+    for k in widths:
+        gp.batched_select(items[:k])
+
+    serial = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for post, cand, best, n in items[:8]:
+            picks, _ = gp.select_batch(post, cand, best, n)
+            # select_batch dispatches async — block or the row measures
+            # enqueue
+            jax.block_until_ready(picks)
+        serial.append((time.perf_counter() - t0) / 8 * 1e6)
+    yield "serial/k8", serial
+
+    for k in widths:
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            gp.batched_select(items[:k])   # blocks on picks internally
+            samples.append((time.perf_counter() - t0) / k * 1e6)
+        yield f"batched/k{k}", samples
+
+
+def main():
+    print("row,us_per_ask,speedup_vs_serial")
+    base = None
+    for suffix, samples in run():
+        us = min(samples)
+        if suffix == "serial/k8":
+            base = us
+        ratio = f"{base / us:.2f}" if base else ""
+        print(f"bench_ask/{suffix},{us:.0f},{ratio}")
+
+
+if __name__ == "__main__":
+    main()

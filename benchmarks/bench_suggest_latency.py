@@ -24,6 +24,7 @@ run.py --json`` reduces them to a min-of-k gate value plus p50/p90
 spread, so one CPU-contention hiccup inside a timed loop can no longer
 inflate a committed row ~2× (ISSUE 5).
 """
+import os
 import tempfile
 import threading
 import time
@@ -253,18 +254,28 @@ def run_contended(clients=(1, 8, 32), calls=8, think=0.1, seed_obs=40):
     pre-pipeline behavior the ≥10x target in ISSUE 4 is measured
     against.  ``think`` models trial turnaround (a scheduler asks once
     per completion, not in a closed loop).  The gate value for these
-    rows is the p50 over all per-call samples (``benchmarks/run.py``)."""
+    rows is the p50 over all per-call samples (``benchmarks/run.py``).
+
+    The fixed client counts keep rows comparable across machines, but
+    the largest (c32) oversubscribes a small host: 32 client threads on
+    a 1-core container measure OS scheduler jitter, not the service
+    (see ROADMAP.md's contended-row noise analysis).  The ``cauto``
+    rows pin the count to min(4·cores, 32) — contended enough to
+    exercise the pipeline, small enough to stay unimodal — and are
+    what the tier-2 perf gate rides; the raw c32 rows stay tracked but
+    ungated (scripts/bench_check.py UNGATED_ROWS)."""
+    cauto = min(4 * (os.cpu_count() or 1), 32)
     rows = []
-    for c in clients:
+    for c, label in [(c, f"c{c}") for c in clients] + [(cauto, "cauto")]:
         local = LocalClient(tempfile.mkdtemp())
-        rows.append((f"suggest_contended_local/c{c}",
+        rows.append((f"suggest_contended_local/{label}",
                      _contended(local, c, calls, think, seed_obs,
                                 prefetch=None)))
         local.close()
-    for c in clients:
+    for c, label in [(c, f"c{c}") for c in clients] + [(cauto, "cauto")]:
         server = serve_api(tempfile.mkdtemp()).start()
         try:
-            rows.append((f"suggest_contended_http/c{c}",
+            rows.append((f"suggest_contended_http/{label}",
                          _contended(server.backend, c, calls, think,
                                     seed_obs, prefetch=None,
                                     make_client=lambda: HTTPClient(

@@ -113,6 +113,11 @@ def collect(quick: bool = False) -> dict:
         # serial vs batched cross-experiment hyperfit cost (ISSUE 8):
         # µs per fit, so batched/serial reads as the throughput ratio
         _reduce(rows, stats, f"bench_fit/{suffix}", us)
+    from benchmarks import bench_ask
+    for suffix, us in bench_ask.run(quick=quick):
+        # serial vs batched cross-experiment q-EI ask cost (ISSUE 10):
+        # µs per ask, so batched/serial reads as the throughput ratio
+        _reduce(rows, stats, f"bench_ask/{suffix}", us)
     return {"rows": rows, "stats": stats}
 
 
@@ -148,13 +153,13 @@ def main(argv=None) -> None:
               file=sys.stderr)
         return
 
-    from benchmarks import (bench_fit, bench_fleet, bench_optimizers,
-                            bench_parallel, bench_population,
-                            bench_roofline, bench_scheduler,
-                            bench_suggest_latency)
+    from benchmarks import (bench_ask, bench_fit, bench_fleet,
+                            bench_optimizers, bench_parallel,
+                            bench_population, bench_roofline,
+                            bench_scheduler, bench_suggest_latency)
     for mod in (bench_parallel, bench_optimizers, bench_suggest_latency,
-                bench_fit, bench_scheduler, bench_fleet, bench_population,
-                bench_roofline):
+                bench_fit, bench_ask, bench_scheduler, bench_fleet,
+                bench_population, bench_roofline):
         print(f"\n===== {mod.__name__} =====")
         try:
             mod.main()

@@ -92,6 +92,7 @@ class _ExperimentState:
         self.staleness = max(1, cfg.staleness)
         self.stats = {"hits": 0, "misses": 0, "coalesced": 0,
                       "invalidated": 0, "prefilled": 0, "prewarmed": 0,
+                      "batched_prefilled": 0,
                       "sparse_prefilled": 0, "sparse_served": 0,
                       "requeued": 0, "requeue_served": 0,
                       # sparse-vs-exact quality on finished trials (the

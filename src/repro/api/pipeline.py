@@ -47,6 +47,7 @@ create/resume's "drain then replay the log tail" sequence race-free.
 """
 from __future__ import annotations
 
+import atexit
 import heapq
 import os
 import threading
@@ -91,9 +92,14 @@ class FitLane:
 
     @property
     def group_key(self):
-        """Lanes may co-batch iff this matches: same runner (optimizer
-        family), same shape bucket, same Adam step count — anything else
-        would change a lane's result or force a fresh XLA compile."""
+        """Lanes may co-batch iff this matches.  The spec defines its own
+        grouping (``FitSpec``: (runner, bucket) — step counts merge via
+        the masked variable-step loop; ``AskSpec``: (runner, bucket,
+        k_pad, pool shape)); legacy specs without one group on
+        (runner, bucket, steps), the pre-ISSUE-10 contract."""
+        key = getattr(self.spec, "group_key", None)
+        if key is not None:
+            return key
         return (self.spec.runner, self.spec.bucket, self.spec.steps)
 
 
@@ -108,6 +114,16 @@ class BatchableFit:
 
     def __init__(self, snapshot: Callable[[], Any]):
         self.snapshot = snapshot
+
+
+class BatchableAsk(BatchableFit):
+    """A batchable queue-refill *ask* (ISSUE 10).  Same snapshot/gather
+    machinery as ``BatchableFit`` — the spec's ``kind`` ("ask") routes
+    the dispatch to the ``batched_asks``/``ask_lanes`` counters so fit
+    and ask batching stay separately observable.  Miss serving never
+    goes through this path: coalesced misses keep their exact inline
+    ``ask`` (PRIO_MISS semantics unchanged)."""
+    __slots__ = ()
 
 
 class FitExecutor:
@@ -169,7 +185,8 @@ class FitExecutor:
         self._seq = 0
         self._stopped = False
         self.stats = {"executed": 0, "coalesced": 0, "requeued": 0,
-                      "batched": 0, "lanes": 0}
+                      "batched": 0, "lanes": 0,
+                      "batched_asks": 0, "ask_lanes": 0}
         # duty-cycle accounting (the fleet's admission-control signal):
         # busy worker-seconds, decayed over DUTY_WINDOW so a burst of
         # fits shows up — and clears — within one window
@@ -296,9 +313,13 @@ class FitExecutor:
             batched = self.stats["batched"]
             mean_batch = (round(self.stats["lanes"] / batched, 3)
                           if batched else 0.0)
+            b_asks = self.stats["batched_asks"]
+            mean_ask_batch = (round(self.stats["ask_lanes"] / b_asks, 3)
+                              if b_asks else 0.0)
             return dict(self.stats, backlog=len(self._jobs),
                         workers=self.workers, duty=round(duty, 4),
                         mean_batch=mean_batch,
+                        mean_ask_batch=mean_ask_batch,
                         max_lanes=self._max_lanes_locked(duty))
 
     # ----------------------------------------------------------- workers
@@ -427,9 +448,12 @@ class FitExecutor:
                 except Exception as e:  # noqa: one bad install ≠ batch loss
                     failed += 1
                     err = f"{type(e).__name__}: {e}"
+            is_ask = getattr(lane.spec, "kind", "fit") == "ask"
             with self._cv:
-                self.stats["batched"] += 1
-                self.stats["lanes"] += len(lanes)
+                # fit and ask dispatches count separately, so mean_batch
+                # stays a pure fit-co-batching signal (tests pin it)
+                self.stats["batched_asks" if is_ask else "batched"] += 1
+                self.stats["ask_lanes" if is_ask else "lanes"] += len(lanes)
                 # _run counts the primary; peers are accounted here
                 self.stats["executed"] += len(lanes) - 1
                 if failed:
@@ -445,6 +469,19 @@ class FitExecutor:
 
 _EXECUTOR: Optional[FitExecutor] = None
 _EXECUTOR_LOCK = threading.Lock()
+
+
+@atexit.register
+def _shutdown_executor() -> None:
+    """Drain the executor before interpreter teardown.  Its workers are
+    daemon threads running XLA dispatches; since the batched ask plane
+    (ISSUE 10) keeps them busy whenever any queue is below depth, a
+    process exiting mid-dispatch would abort inside the XLA runtime
+    ("terminate called without an active exception") instead of exiting
+    cleanly.  stop() discards the queue and joins the in-flight job."""
+    ex = _EXECUTOR
+    if ex is not None and ex.alive:
+        ex.stop(join=True)
 
 
 def fit_executor() -> FitExecutor:
@@ -660,6 +697,13 @@ class SuggestionPump:
         """This experiment's coalescing key on the shared FitExecutor."""
         return ("fit", id(self.state))
 
+    @property
+    def ask_key(self) -> tuple:
+        """Coalescing key of this experiment's batched refill ask — a
+        separate key from ``fit_key`` so a queued refill never coalesces
+        away an owed hyperfit (or vice versa)."""
+        return ("ask", id(self.state))
+
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "SuggestionPump":
         self._thread.start()
@@ -672,6 +716,7 @@ class SuggestionPump:
         self._stop.set()
         self._wake.set()
         cancel_fit(self.fit_key)
+        cancel_fit(self.ask_key)
         if join and self._thread.is_alive() \
                 and self._thread is not threading.current_thread():
             self._thread.join(timeout)
@@ -783,6 +828,19 @@ class SuggestionPump:
             spec = (saturated
                     and getattr(state.optimizer, "speculative_ask", False)
                     and state.optimizer.sparse_eligible())
+            if (getattr(state.optimizer, "batchable_asks", False)
+                    and state.optimizer.ask_spec_ready()):
+                # batched ask plane (ISSUE 10): publish the refill as a
+                # batchable snapshot on the shared executor, which may
+                # co-batch it with other experiments' refills into ONE
+                # vmap'd q-EI dispatch; its install callback fills the
+                # queue and wakes this pump.  Misses never ride this
+                # path — serve_misses above keeps its exact inline ask.
+                fit_executor().submit(
+                    self.ask_key,
+                    BatchableAsk(lambda: self._ask_lane(spec)),
+                    PRIO_REFILL)
+                return busy or swept
             assigns = (state.optimizer.ask(want, speculative=True)
                        if spec else state.optimizer.ask(want))
             with state.lock:
@@ -868,6 +926,72 @@ class SuggestionPump:
                 with state.lock:
                     state.stats["maintained"] = (
                         state.stats.get("maintained", 0) + 1)
+        return FitLane(spec, install)
+
+    def _ask_lane(self, speculative: bool):
+        """Snapshot this experiment's queue refill as a batchable ask
+        lane (ISSUE 10).  Phase 1, here: under ``opt_lock``, drain the
+        deferred folds, recompute the refill budget (``want`` may have
+        shrunk since the tick that submitted us), and let the optimizer
+        snapshot an ``AskSpec`` — posterior prepared, selection
+        deferred.  Returns a ``FitLane``, ``RETRY`` on lock contention,
+        or None when no refill is owed anymore.  Phase 2 (the q-EI
+        scan) runs lock-free on the executor, possibly co-batched;
+        phase 3 — the install below — mints the assignments and
+        extends the queue under this experiment's own locks."""
+        state = self.state
+        if self._stop.is_set():
+            return None
+        if not state.opt_lock.acquire(timeout=0.05):
+            return None if self._stop.is_set() else RETRY
+        try:
+            drain_ops(state)
+            with state.lock:
+                if state.stopped or state.observed >= state.cfg.budget:
+                    return None
+                headroom = (state.cfg.budget - state.observed
+                            - len(state.pending) - len(state.queue))
+                want = min(self.depth - len(state.queue),
+                           max(0, headroom), ASK_CHUNK)
+                born = state.observed
+            if want <= 0:
+                return None
+            spec = state.optimizer.ask_spec(want, speculative=speculative)
+        finally:
+            state.opt_lock.release()
+        if spec is None:
+            return None
+        inner = spec.install
+        sparse = spec.sparse
+
+        def install(result, dt):
+            with state.opt_lock:
+                if self._stop.is_set():
+                    return
+                assigns = inner(result, dt)
+                with state.lock:
+                    if state.stopped or state.observed >= state.cfg.budget:
+                        take = []
+                    else:
+                        headroom = (state.cfg.budget - state.observed
+                                    - len(state.pending) - len(state.queue))
+                        take = assigns[:max(0, headroom)]
+                    # born is the snapshot-time observation count: the
+                    # staleness clock starts when the posterior was
+                    # captured, not when the dispatch landed
+                    state.queue.extend(
+                        PrefetchItem(a, born, sparse=sparse) for a in take)
+                    state.stats["prefilled"] += len(take)
+                    state.stats["batched_prefilled"] = (
+                        state.stats.get("batched_prefilled", 0) + len(take))
+                    if sparse:
+                        state.stats["sparse_prefilled"] = (
+                            state.stats.get("sparse_prefilled", 0)
+                            + len(take))
+                    extra = assigns[len(take):]
+                for a in extra:
+                    state.optimizer.forget(a)
+            self._wake.set()
         return FitLane(spec, install)
 
     def _maintain_job(self) -> bool:

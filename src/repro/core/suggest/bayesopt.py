@@ -74,10 +74,14 @@ SPARSE_TUNE_OBS = 8
 class FitSpec:
     """Batchable deferred-fit descriptor (ISSUE 8) — what
     ``Optimizer.fit_spec`` snapshots under the optimizer lock for the
-    shared FitExecutor.  Specs sharing ``(runner, bucket, steps)`` may be
-    co-batched into one vmap'd dispatch; ``install(params, fit_seconds)``
+    shared FitExecutor.  Specs sharing ``group_key`` may be co-batched
+    into one vmap'd dispatch — since the masked variable-step fit loop
+    (ISSUE 10) the key is ``(runner, bucket)`` only: lanes on different
+    rungs of the adaptive warm-step ladder merge into one ``max(steps)``
+    dispatch with per-lane freeze masks.  ``install(params, fit_seconds)``
     is called back under the optimizer lock, preserving the two-phase
     no-mutation contract (compute never touches live state)."""
+    kind = "fit"
     __slots__ = ("bucket", "steps", "x", "y", "params0", "install",
                  "runner")
 
@@ -90,12 +94,18 @@ class FitSpec:
         self.install = install
         self.runner = runner
 
+    @property
+    def group_key(self):
+        return (self.runner, self.bucket)
+
 
 def run_fit_lanes(specs: Sequence[FitSpec]):
-    """FitExecutor lane runner: fit every spec (all sharing one
-    (bucket, steps) group) in one ``gp.batched_fit`` dispatch — or the
-    ordinary ``fit_gp`` path for a single lane, so a lone refit reuses
-    the per-bucket ``_fit`` compiles ``prewarm`` already paid for.
+    """FitExecutor lane runner: fit every spec (all sharing one shape
+    bucket) in one ``gp.batched_fit`` dispatch — or the ordinary
+    ``fit_gp`` path for a single lane, so a lone refit reuses the
+    per-bucket ``_fit`` compiles ``prewarm`` already paid for.  Mixed
+    per-lane step counts are fine: the batched fit runs a masked
+    ``max(steps)`` loop that freezes each lane at its own budget.
     Returns (list of fitted GPParams, total wall seconds)."""
     t0 = time.perf_counter()
     if len(specs) == 1:
@@ -105,7 +115,56 @@ def run_fit_lanes(specs: Sequence[FitSpec]):
         out = [post.params]
     else:
         out = gp.batched_fit([(s.x, s.y, s.params0) for s in specs],
-                             steps=specs[0].steps, bucket=specs[0].bucket)
+                             steps=[s.steps for s in specs],
+                             bucket=specs[0].bucket)
+    return out, time.perf_counter() - t0
+
+
+class AskSpec:
+    """Batchable deferred-*ask* descriptor (ISSUE 10) — what
+    ``BayesOpt.ask_spec`` snapshots under the optimizer lock so the
+    shared FitExecutor can gather queue-refill asks from several
+    experiments into ONE vmap'd q-EI dispatch (``gp.batched_select``).
+    Specs sharing ``group_key`` — same runner, posterior bucket, scan
+    pad and candidate-pool shape — stack on a lane axis and compile
+    once per (bucket, k_pad, lane-pad) triple.  ``install(result, dt)``
+    — result the lane's ``(picks, posterior)`` pair — is called back
+    under the optimizer lock; it mints the suggestions' assignments
+    (registering their constant-liar tokens) and either adopts the
+    lie-folded posterior (when the optimizer's posterior is unchanged
+    since the snapshot) or just marks a recondition — batched refills
+    are speculative-queue-only, so the staleness bound contains any
+    mid-flight drift exactly as it does for sparse refills."""
+    kind = "ask"
+    __slots__ = ("bucket", "k", "k_pad", "post", "cand", "best",
+                 "install", "runner", "sparse")
+
+    def __init__(self, bucket, k, post, cand, best, install, runner,
+                 sparse=False, k_pad=None):
+        self.bucket = int(bucket)
+        self.k = int(k)
+        self.k_pad = int(gp.SELECT_PAD if k_pad is None else k_pad)
+        self.post = post
+        self.cand = cand
+        self.best = best
+        self.install = install
+        self.runner = runner
+        self.sparse = bool(sparse)
+
+    @property
+    def group_key(self):
+        return (self.runner, self.bucket, self.k_pad,
+                tuple(self.cand.shape))
+
+
+def run_ask_lanes(specs: Sequence[AskSpec]):
+    """FitExecutor lane runner for batched refill asks: run every
+    spec's q-EI batch selection in one ``gp.batched_select`` dispatch.
+    Returns (list of per-lane (picks, posterior) pairs, wall seconds) —
+    the executor feeds each pair to its lane's ``install``."""
+    t0 = time.perf_counter()
+    out = gp.batched_select([(s.post, s.cand, s.best, s.k) for s in specs],
+                            k_pad=specs[0].k_pad)
     return out, time.perf_counter() - t0
 
 
@@ -115,6 +174,7 @@ class BayesOpt(Optimizer):
     expensive_ask = True        # service runs the prefetch pump for us
     speculative_ask = True      # honors ask(n, speculative=True)
     batchable_fits = True       # fit_spec() descriptors may co-batch
+    batchable_asks = True       # ask_spec() descriptors may co-batch
 
     def __init__(self, space: Space, seed: int = 0, n_init: int = 8,
                  candidates: int = 1024, fit_steps: int = 150,
@@ -226,7 +286,11 @@ class BayesOpt(Optimizer):
         the lane-pad-1 compile otherwise lands mid-run — off the request
         path, but on a saturated box it still stalls in-flight requests
         for the compile's duration.  Multi-lane pads stay lazy (they only
-        occur when experiments co-batch)."""
+        occur when experiments co-batch).  The batched-ask scan is warmed
+        at ``select_lanes=(1, 2)`` (ISSUE 10): every executor refill
+        dispatch runs through ``batched_select``, so lane pads 1 and 2 —
+        the overwhelmingly common co-batch widths — must never compile
+        mid-run; wider pads stay lazy for the same reason as fit lanes."""
         target = gp.bucket_size(max(1, int(max_history)))
         k_pads, kp = [], 1
         pad_max = 1 << max(0, int(batch) - 1).bit_length()
@@ -245,7 +309,8 @@ class BayesOpt(Optimizer):
                                   fit_steps=(self.fit_steps,
                                              self._warm_steps_at(b // 2),
                                              self._warm_steps_at(b)),
-                                  k_pads=k_pads, n_cand=m, fit_lanes=(1,))
+                                  k_pads=k_pads, n_cand=m, fit_lanes=(1,),
+                                  select_lanes=(1, 2))
                 warmed += 1
             b *= 2
         self._prewarmed = max(self._prewarmed, target)
@@ -379,6 +444,87 @@ class BayesOpt(Optimizer):
                 spec.install(out[0], dt)
             return install
         return run
+
+    # ----------------------------------------------------- batchable ask
+    def ask_spec_ready(self) -> bool:
+        """Whether ``ask_spec`` would yield a batchable refill right now
+        — the service pump checks this (under the optimizer lock) before
+        routing a queue refill through the shared executor instead of an
+        inline ``ask``.  Only the random init phase is excluded: random
+        suggestions are cheap and carry no posterior to batch."""
+        return len(self._ys) >= max(self.n_init, 2, len(self.space))
+
+    def ask_spec(self, n: int = 1,
+                 speculative: bool = False) -> Optional["AskSpec"]:
+        """Snapshot a queue-refill ask as a batchable ``AskSpec``
+        (ISSUE 10).  Performs exactly the posterior preparation ``ask``
+        would — recondition / sparse rebuild under the caller-held
+        optimizer lock — but *defers the q-EI selection scan* to the
+        executor, which may co-batch it with other experiments' refills
+        into one ``gp.batched_select`` dispatch.  ``spec.install`` must
+        be called back under the optimizer lock; it returns the minted
+        assignments (lie tokens registered, exactly as ``ask`` would
+        have produced).  Returns None outside the model phase or when
+        ``n`` exceeds the fixed ``gp.SELECT_PAD`` scan pad."""
+        n = int(n)
+        if n <= 0 or n > gp.SELECT_PAD or not self.ask_spec_ready():
+            return None
+        sparse = bool(speculative and self.sparse_eligible())
+        if sparse:
+            if (self._sparse_post is None
+                    or self._sparse_post.capacity - self._sparse_rows < n):
+                self._sparse_recondition(extra=n)
+            post = self._sparse_post
+        else:
+            if self._post is None or (self._needs_fit
+                                      and not (self.defer_fits
+                                               and self._params is not None)):
+                self._refit(extra=n)
+            elif (self._needs_fit or self._needs_recondition
+                    or self._free_slots() < n):
+                self._recondition(extra=n)
+            post = self._post
+            if post is None:
+                return None
+        cand = self._candidates()
+        best = float(max(self._ys))
+
+        def install(result, dt):
+            picks, lane_post = result
+            out = []
+            for j in np.asarray(picks):
+                u = np.asarray(cand[int(j)], float)
+                a = self.space.from_unit(u)
+                a[LIE_KEY] = self._new_lie(u)
+                out.append(a)
+            if sparse:
+                if self._sparse_post is post:
+                    # nothing moved mid-dispatch: adopt the lie-folded
+                    # sparse posterior — the exact fast path
+                    self._sparse_post = lane_post
+                    self._sparse_rows += n
+                else:
+                    self._sparse_post = None
+                self._sparse_asks += n
+                self._needs_recondition = True
+            else:
+                if self._post is post and not self._needs_recondition:
+                    self._post = lane_post
+                    self._n_in_post += n
+                else:
+                    # the posterior moved while the dispatch was in
+                    # flight (observation fold / forget): the minted
+                    # lies are registered but not folded — the next
+                    # exact ask reconditions with the full pending set.
+                    # Safe because batched refills only feed the
+                    # staleness-bounded speculative queue.
+                    self._needs_recondition = True
+                self._sparse_post = None
+            return out
+
+        return AskSpec(bucket=post.capacity, k=n, post=post, cand=cand,
+                       best=best, install=install, runner=run_ask_lanes,
+                       sparse=sparse)
 
     def ask(self, n: int = 1, speculative: bool = False) -> List[Assignment]:
         n = int(n)

@@ -51,6 +51,14 @@ MIN_BUCKET = 16
 #: grows compile variants; callers split larger sets into chunks.
 FIT_LANES_MAX = 32
 
+#: Scan-length pad of the *batched* q-EI select (``batched_select``):
+#: every batched refill ask runs a ``SELECT_PAD``-step scan with its live
+#: pick count traced, so lanes wanting different batch sizes still share
+#: one compile per (bucket, SELECT_PAD, lane-pad) — and the service's
+#: refill chunk (``pipeline.ASK_CHUNK``) is sized to never exceed it.
+#: The solo ``select_batch`` path keeps its natural per-k pads.
+SELECT_PAD = 8
+
 #: Cap on the subset-of-data design of the sparse speculative posterior.
 #: 64 keeps the sparse Cholesky inside the two smallest non-trivial shape
 #: buckets (64/128 once lies and picks are folded in), which ``prewarm``
@@ -169,12 +177,14 @@ def _fit(params0: GPParams, x, y, mask, steps: int = 150, lr: float = 0.05):
 
 def lane_pad(k: int) -> int:
     """Smallest power of two >= k — the lane-count pad of ``batched_fit``
-    (one ``_fit_lanes`` compile per (bucket, steps, lane-pad) triple)."""
+    and ``batched_select`` (one ``_fit_lanes`` compile per
+    (bucket, max-steps, lane-pad) triple, one ``_select_lanes`` compile
+    per (bucket, k-pad, lane-pad) triple)."""
     return 1 << max(0, int(k) - 1).bit_length()
 
 
-@functools.partial(jax.jit, static_argnames=("steps",))
-def _fit_lanes(params0: GPParams, x, y, mask, steps: int = 150,
+@functools.partial(jax.jit, static_argnames=("max_steps",))
+def _fit_lanes(params0: GPParams, x, y, mask, steps, max_steps: int = 150,
                lr: float = 0.05):
     """Batched ``_fit``: every GPParams leaf and data array carries a
     leading lane axis (k experiments), and one Adam loop advances all
@@ -186,7 +196,17 @@ def _fit_lanes(params0: GPParams, x, y, mask, steps: int = 150,
     is computed per lane, and the NaN-reject check is per-lane, so one
     ill-conditioned experiment can't stall its batch peers.
     All-zero-mask lanes (the lane padding) see an identity covariance —
-    zero gradient, parameters inert."""
+    zero gradient, parameters inert.
+
+    ``steps`` is a traced (k,) int32 of per-lane step budgets and
+    ``max_steps`` the static scan length (>= every entry): the loop runs
+    ``max_steps`` iterations with a per-lane freeze mask that discards a
+    lane's parameter update once its own budget is spent.  Lanes on
+    different rungs of the adaptive warm-step ladder therefore share one
+    dispatch, and because every live lane sees the identical global Adam
+    step index ``t``, a lane frozen at ``steps[i]`` holds exactly the
+    parameters a solo ``_fit_lanes`` run of length ``steps[i]`` would
+    produce — bit-identical, not merely close."""
     def adam_step(carry, _):
         p, m, v, t = carry
         g = GPParams(*_kops.gp_fit_grads(p.log_ls, p.log_amp,
@@ -203,21 +223,21 @@ def _fit_lanes(params0: GPParams, x, y, mask, steps: int = 150,
                      jnp.clip(p.log_noise, -5.0, 1.0))
         ok = (jnp.all(jnp.isfinite(p.log_ls), axis=-1)
               & jnp.isfinite(p.log_amp) & jnp.isfinite(p.log_noise))  # (k,)
+        keep = ok & (t <= steps)                 # freeze finished lanes
         prev = carry[0]
-        p = GPParams(jnp.where(ok[:, None], p.log_ls, prev.log_ls),
-                     jnp.where(ok, p.log_amp, prev.log_amp),
-                     jnp.where(ok, p.log_noise, prev.log_noise))
+        p = GPParams(jnp.where(keep[:, None], p.log_ls, prev.log_ls),
+                     jnp.where(keep, p.log_amp, prev.log_amp),
+                     jnp.where(keep, p.log_noise, prev.log_noise))
         return (p, m, v, t), None
 
     zeros = jax.tree.map(jnp.zeros_like, params0)
     (p, _, _, _), _ = jax.lax.scan(
         adam_step, (params0, zeros, zeros, jnp.zeros((), jnp.int32)),
-        None, length=steps)
+        None, length=max_steps)
     return p
 
 
-def batched_fit(items, steps: int = 150,
-                bucket: Optional[int] = None) -> list:
+def batched_fit(items, steps=150, bucket: Optional[int] = None) -> list:
     """Fit k experiments' GP hyperparameters in ONE vmap'd dispatch.
 
     ``items`` is a sequence of ``(x, y, params0)`` triples — x (n,d) in
@@ -226,9 +246,14 @@ def batched_fit(items, steps: int = 150,
     largest history).  Each lane is normalized and padded exactly as
     ``fit_gp`` would, stacked along a leading lane axis, and the lane
     count is padded to the next power of two with inert all-zero-mask
-    lanes, so XLA compiles once per (bucket, steps, lane-pad) triple.
-    Returns a list of k fitted ``GPParams`` (install with
-    ``make_posterior`` / the optimizer's recondition, as usual)."""
+    lanes, so XLA compiles once per (bucket, max-steps, lane-pad) triple.
+
+    ``steps`` is an int (every lane) or a per-lane sequence: lanes on
+    different adaptive-ladder step counts run inside one masked loop of
+    ``max(steps)`` iterations (see ``_fit_lanes``) — each lane's result
+    is bit-identical to a solo fit at its own step count.  Returns a
+    list of k fitted ``GPParams`` (install with ``make_posterior`` /
+    the optimizer's recondition, as usual)."""
     if not items:
         return []
     if len(items) > FIT_LANES_MAX:
@@ -241,6 +266,10 @@ def batched_fit(items, steps: int = 150,
     d = np.asarray(items[0][0]).shape[1]
     k = len(items)
     kp = lane_pad(k)
+    steps_list = ([int(steps)] * k if isinstance(steps, (int, np.integer))
+                  else [int(s) for s in steps])
+    if len(steps_list) != k:
+        raise ValueError(f"{len(steps_list)} step counts for {k} lanes")
     # one host-side buffer per array and ONE device put each — k small
     # transfers per lane would cost more than the fit at warm step counts
     xs = np.zeros((kp, b, d), np.float64)
@@ -249,6 +278,8 @@ def batched_fit(items, steps: int = 150,
     lls = np.full((kp, d), -0.7, np.float64)
     las = np.zeros((kp,), np.float64)
     lns = np.full((kp,), -2.0, np.float64)
+    st = np.zeros((kp,), np.int32)
+    st[:k] = steps_list
     for i, (x, y, params0) in enumerate(items):
         x = np.asarray(x, np.float64)
         y_raw = np.asarray(y, np.float64)
@@ -268,7 +299,8 @@ def batched_fit(items, steps: int = 150,
     p0 = GPParams(jnp.asarray(lls, dtype), jnp.asarray(las, dtype),
                   jnp.asarray(lns, dtype))
     p = _fit_lanes(p0, jnp.asarray(xs, dtype), jnp.asarray(ys, dtype),
-                   jnp.asarray(ms, dtype), steps=steps)
+                   jnp.asarray(ms, dtype), jnp.asarray(st),
+                   max_steps=max(steps_list))
     jax.block_until_ready(p.log_ls)
     return [GPParams(p.log_ls[i], p.log_amp[i], p.log_noise[i])
             for i in range(k)]
@@ -390,7 +422,7 @@ def sparse_posterior(params: GPParams, x: np.ndarray, y: np.ndarray,
 
 # ---------------------------------------------------------------- prewarm
 def prewarm_bucket(d: int, bucket: int, fit_steps=(), k_pads=(),
-                   n_cand: int = 64, fit_lanes=()) -> None:
+                   n_cand: int = 64, fit_lanes=(), select_lanes=()) -> None:
     """Compile every jitted kernel on the ask path for one bucket shape,
     using throwaway data: the hyperparameter fit (one ``_fit`` variant per
     entry in ``fit_steps``), the exact posterior, the rank-1 appends, and
@@ -408,7 +440,13 @@ def prewarm_bucket(d: int, bucket: int, fit_steps=(), k_pads=(),
     refit dispatch doesn't pay its (bucket, steps, lane-pad) compile
     under load.  Off by default — batched dispatches already run off
     the request path, so lazy first-touch compiles only delay one
-    install."""
+    install.
+
+    ``select_lanes`` is the analogous lane-pad ladder of the batched
+    *ask* path (ISSUE 10): for each lane count the ``_select_lanes``
+    variant is compiled at the fixed ``SELECT_PAD`` scan length and the
+    real pool size ``n_cand``, so a shard's first co-batched refill
+    dispatch never XLA-compiles mid-run."""
     x = np.zeros((2, d), np.float64)
     x[1] = 0.5
     y = np.array([0.0, 1.0], np.float64)
@@ -428,6 +466,9 @@ def prewarm_bucket(d: int, bucket: int, fit_steps=(), k_pads=(),
     for kp in sorted({int(k) for k in k_pads}):
         if kp + 2 <= bucket:    # the scan needs kp free padded slots
             select_batch(post, cand, np.float32(1.0), kp)
+    if SELECT_PAD + 2 <= bucket:
+        for lanes in sorted({lane_pad(int(s)) for s in select_lanes}):
+            batched_select([(post, cand, np.float32(1.0), 1)] * lanes)
 
 
 # ---------------------------------------------------------------- queries
@@ -527,3 +568,158 @@ def select_batch(post: GPPosterior, cand: jnp.ndarray, best,
                                jnp.asarray(best, post.y_mean.dtype),
                                jnp.asarray(k, jnp.int32), k_pad)
     return picks[:k], post
+
+
+# ----------------------------------------------------- batched q-EI select
+@functools.partial(jax.jit, static_argnames=("k_pad",))
+def _select_lanes(post: GPPosterior, cand: jnp.ndarray, best: jnp.ndarray,
+                  k: jnp.ndarray, k_pad: int):
+    """Lane-batched ``_select_scan``: every posterior leaf, the candidate
+    pool (kl,m,d), the EI threshold ``best`` (kl,) and the live pick
+    count ``k`` (kl,) carry a leading lane axis, and one greedy
+    constant-liar scan advances all lanes together.
+
+    Unlike the serial scan — which recomputes the full cross-covariance
+    ``kq = cov(cand, X)`` and whitened solve ``v = L⁻¹kqᵀ`` (O(b²m))
+    every step — the batched scan pays that factorization ONCE per
+    dispatch and extends it incrementally: a lie append adds one bordered
+    Cholesky row, so only one new column of ``kq`` (O(md)), one forward-
+    substitution row of ``v`` (O(bm)) and a rank-1 update of the
+    predictive-variance partials change per step.  The step-0 EI is
+    algebraically the same quantity ``ops.gp_ei`` computes (mirrored
+    here so the factors stay live in the scan carry); every serial step
+    after it drops from O(b²m) to O(bm), which is what makes the batched
+    plane cheaper per ask than the serial path even on a single-core CPU
+    host where vmap buys no parallelism (see benchmarks/bench_ask.py).
+
+    Lanes are independent: a lane whose own ``k`` is spent (and the
+    all-zero-mask lane padding, where k == 0) keeps computing but has
+    its posterior and taken-mask updates reverted — the carried
+    ``kq/v/ss`` factors are deliberately left hot, since a dead lane's
+    later picks and factors are discarded by the caller and never feed
+    another lane.  Mixed batch sizes share one compile per (bucket,
+    k_pad, lane-pad) triple."""
+    kl, m = cand.shape[0], cand.shape[1]
+    lanes = jnp.arange(kl)
+
+    def factorize(p, c):
+        kq = matern52(c, p.x, p.params) * p.mask[None, :]        # (m,b)
+        v = jax.scipy.linalg.solve_triangular(p.chol, kq.T,
+                                              lower=True)        # (b,m)
+        return kq, v
+    kq, v = jax.vmap(factorize)(post, cand)
+    ss = jnp.sum(v * v, axis=1)                                  # (kl,m)
+
+    def lane_step(p, kq, v, ss, taken, c, b_inc, k1, i):
+        amp2 = jnp.exp(2 * p.params.log_amp)
+        mu_n = kq @ p.alpha                                      # (m,)
+        var = jnp.maximum(amp2 - ss, 1e-12)
+        mu = mu_n * p.y_std + p.y_mean
+        sd = jnp.sqrt(var) * p.y_std
+        z = (mu - b_inc - 0.01) / sd
+        ncdf = 0.5 * (1 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+        npdf = jnp.exp(-0.5 * z * z) / jnp.sqrt(2 * jnp.pi)
+        ei = (mu - b_inc - 0.01) * ncdf + sd * npdf
+        ei = jnp.where(taken, -jnp.inf, ei)
+        j = jnp.argmax(ei)
+        xn = c[j]
+        # bordered-Cholesky append (mirrors _append_norm), reusing the
+        # carried factors: l12 = L⁻¹ cov(xn, X) is column j of v and
+        # l12·l12 is ss[j] — both already paid for
+        idx = jnp.sum(p.mask).astype(jnp.int32)
+        l12 = v[:, j]
+        kss = amp2 + _noise2(p.params)
+        l22 = jnp.sqrt(jnp.maximum(kss - ss[j], 1e-10))
+        chol = p.chol.at[idx, :].set(l12.at[idx].set(l22))
+        x = p.x.at[idx].set(xn)
+        mask = p.mask.at[idx].set(1.0)
+        y = p.y.at[idx].set(mu_n[j])                 # constant liar
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+        p2 = GPPosterior(p.params, x, mask, y, chol, alpha,
+                         p.y_mean, p.y_std)
+        # extend the factors by the new posterior row: one kernel column,
+        # one forward-substitution row, one variance partial
+        kq_col = matern52(c, xn[None], p.params)[:, 0]           # (m,)
+        kq2 = kq.at[:, idx].set(kq_col)
+        v_row = (kq_col - l12 @ v) / l22                         # (m,)
+        v2 = v.at[idx, :].set(v_row)
+        ss2 = ss + v_row * v_row
+        live = i < k1
+        p = jax.tree.map(lambda new, old: jnp.where(live, new, old), p2, p)
+        taken = jnp.where(live, taken.at[j].set(True), taken)
+        return p, kq2, v2, ss2, taken, j
+
+    def step(carry, i):
+        p, kq, v, ss, taken = carry
+        p, kq, v, ss, taken, j = jax.vmap(
+            lane_step, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))(
+            p, kq, v, ss, taken, cand, best, k, i)
+        return (p, kq, v, ss, taken), j
+
+    (post, _, _, _, _), picks = jax.lax.scan(
+        step, (post, kq, v, ss, jnp.zeros((kl, m), bool)),
+        jnp.arange(k_pad))
+    return picks.T, post                                     # (kl,k_pad)
+
+
+def _inert_posterior(b: int, d: int, dtype) -> GPPosterior:
+    """Lane padding for ``batched_select``: an empty posterior whose
+    masked covariance is the identity — chol = I, alpha = 0, so EI and
+    the bordered-Cholesky append stay finite — and whose k == 0 means
+    every scan step is reverted anyway."""
+    return GPPosterior(
+        GPParams(jnp.zeros((d,), dtype), jnp.zeros((), dtype),
+                 jnp.zeros((), dtype)),
+        jnp.zeros((b, d), dtype), jnp.zeros((b,), dtype),
+        jnp.zeros((b,), dtype), jnp.eye(b, dtype=dtype),
+        jnp.zeros((b,), dtype), jnp.zeros((), dtype),
+        jnp.ones((), dtype))
+
+
+def batched_select(items, k_pad: int = SELECT_PAD) -> list:
+    """Run k experiments' q-EI batch selections in ONE vmap'd dispatch.
+
+    ``items`` is a sequence of ``(post, cand, best, k)`` tuples — post a
+    ``GPPosterior``, cand (m,d) candidate pool, best the raw-units EI
+    incumbent, k <= ``k_pad`` the live pick count — all sharing one
+    posterior bucket and one pool shape.  Posteriors are stacked along a
+    leading lane axis, the lane count is padded to the next power of two
+    with inert lanes, and the scan length is the fixed ``k_pad`` (default
+    ``SELECT_PAD``) with per-lane k traced, so XLA compiles once per
+    (bucket, k_pad, lane-pad) triple regardless of each lane's batch
+    size.  Returns a list of k ``(picks, post)`` pairs exactly as
+    ``select_batch`` would produce — picks (k_i,) candidate indices,
+    post the lane's posterior with its k_i lies folded in."""
+    if not items:
+        return []
+    dtype = _dtype()
+    kl = len(items)
+    klp = lane_pad(kl)
+    b = items[0][0].capacity
+    d = int(items[0][0].x.shape[1])
+    m = int(np.asarray(items[0][1]).shape[0])
+    posts = []
+    cands = np.zeros((klp, m, d), np.float32)
+    bests = np.zeros((klp,), np.float64)
+    ks = np.zeros((klp,), np.int32)
+    for i, (post, cand, best, k) in enumerate(items):
+        if post.capacity != b:
+            raise ValueError(f"lane {i}: bucket {post.capacity} != {b}")
+        cand = np.asarray(cand, np.float32)
+        if cand.shape != (m, d):
+            raise ValueError(f"lane {i}: pool {cand.shape} != {(m, d)}")
+        if not 0 < int(k) <= k_pad:
+            raise ValueError(f"lane {i}: k={k} outside (0, {k_pad}]")
+        posts.append(post)
+        cands[i] = cand
+        bests[i] = float(best)
+        ks[i] = int(k)
+    posts.extend(_inert_posterior(b, d, dtype) for _ in range(klp - kl))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *posts)
+    picks, posts_out = _select_lanes(
+        stacked, jnp.asarray(cands, dtype), jnp.asarray(bests, dtype),
+        jnp.asarray(ks), int(k_pad))
+    jax.block_until_ready(picks)
+    return [(picks[i, :int(ks[i])],
+             jax.tree.map(lambda a, i=i: a[i], posts_out))
+            for i in range(kl)]
